@@ -1,0 +1,18 @@
+"""Figure 13: cold-start rate per scheduling algorithm."""
+
+from __future__ import annotations
+
+from .common import SCHEDULERS, matrix, save_json, stats
+
+
+def run(quick: bool = False):
+    m = matrix(quick)
+    rows = []
+    payload = {}
+    for name in SCHEDULERS:
+        s = stats(m, name)
+        payload[name] = s["cold_rate"]
+        rows.append((f"cold_rate/{name}", s["cold_rate"] * 1e6,
+                     f"paper: hiku=30% others=43-59%; got={s['cold_rate']:.1%}"))
+    save_json("fig13_coldstarts", payload)
+    return rows

@@ -1,0 +1,28 @@
+"""Figure 17: requests/second at 20, 50, 100 virtual users."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import SCHEDULERS, VU_LEVELS, matrix, save_json
+
+
+def run(quick: bool = False):
+    m = matrix(quick)
+    rows = []
+    payload = {}
+    for name in SCHEDULERS:
+        payload[name] = {}
+        for vus in VU_LEVELS:
+            rps = float(np.mean(m[name]["per_vu_rps"][vus]))
+            payload[name][vus] = rps
+            rows.append((f"concurrency_rps/{name}/{vus}vu", rps * 1e3, f"{rps:.1f} rps"))
+    # the paper's headline: hiku's advantage grows with concurrency
+    if not quick:
+        h, c = payload["hiku"], payload["ch_bl"]
+        adv_low = h[20] / max(c[20], 1e-9)
+        adv_high = h[100] / max(c[100], 1e-9)
+        rows.append(("concurrency_advantage_growth", (adv_high - adv_low) * 1e6,
+                     f"paper: similar@20vu, hiku wins@100vu; got {adv_low:.3f}->{adv_high:.3f}"))
+    save_json("fig17_concurrency", payload)
+    return rows

@@ -1,0 +1,21 @@
+"""Figures 14-15: load imbalance (CV of requests assigned/worker/second)."""
+
+from __future__ import annotations
+
+from .common import SCHEDULERS, matrix, save_json, stats
+
+
+def run(quick: bool = False):
+    m = matrix(quick)
+    rows = []
+    payload = {}
+    for name in SCHEDULERS:
+        s = stats(m, name)
+        payload[name] = s["avg_cv"]
+        rows.append((f"load_cv/{name}", s["avg_cv"] * 1e6,
+                     f"paper: hiku=0.27 lc=0.26 chbl=0.31; got={s['avg_cv']:.3f}"))
+    if payload.get("ch_bl"):
+        imp = (payload["ch_bl"] - payload["hiku"]) / payload["ch_bl"] * 100
+        rows.append(("load_cv_improvement_vs_chbl", imp * 1e3, f"paper=12.9% got={imp:.1f}%"))
+    save_json("fig14_15_imbalance", payload)
+    return rows

@@ -1,0 +1,92 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas TPU kernels run in interpret mode (Python
+loop — timings meaningless for TPU), so the timed paths here are:
+* the XLA reference implementations (what the dry-run compiles), and
+* the paper-relevant comparison: fused sched_step burst vs per-event scan —
+  the scheduler hot path this framework contributes (both timed on XLA:CPU,
+  an apples-to-apples comparison).
+Pallas-kernel FLOP counts are derived analytically for the roofline notes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jax_sched import ARRIVAL, init_state, sched_many
+from repro.kernels import ref
+
+from .common import save_json
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run(quick: bool = False):
+    rows = []
+    payload = {}
+    ks = jax.random.split(jax.random.key(0), 5)
+
+    # flash attention ref (XLA path used by the dry-run)
+    B, S, H, KH, hd = 1, 512 if quick else 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, hd), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    us = _time(fa, q, k, v)
+    flops = 4 * B * S * S * H * hd
+    rows.append(("kernel/flash_attention_xla", us, f"{flops/us/1e6:.1f} GFLOP/s cpu"))
+    payload["flash_attention_us"] = us
+
+    # decode attention ref
+    Sd = 4096 if quick else 16384
+    kc = jax.random.normal(ks[1], (B, Sd, KH, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Sd, KH, hd), jnp.float32)
+    qd = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    da = jax.jit(lambda q, kc, vc: ref.decode_attention_ref(q, kc, vc, jnp.int32(Sd - 1)))
+    us = _time(da, qd, kc, vc)
+    byts = 2 * Sd * KH * hd * 4
+    rows.append(("kernel/decode_attention_xla", us, f"{byts/us/1e3:.1f} GB/s cache stream"))
+    payload["decode_attention_us"] = us
+
+    # SSD scan ref
+    Ss, Hs, P, N = (512 if quick else 2048), 24, 64, 128
+    x = jax.random.normal(ks[0], (1, Ss, Hs, P)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, Ss, Hs)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hs,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (1, Ss, 1, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (1, Ss, 1, N)) * 0.3
+    ssd = jax.jit(lambda *a: ref.ssd_scan_ref(*a, chunk=256)[0])
+    us = _time(ssd, x, dt, A, Bm, Cm)
+    rows.append(("kernel/ssd_scan_xla", us, f"S={Ss} H={Hs}"))
+    payload["ssd_scan_us"] = us
+
+    # fused scheduler burst vs per-event scan (the paper's hot path)
+    R, F, W = 256, 40, 128
+    funcs = jax.random.randint(ks[0], (R,), 0, F)
+    idle = jax.random.randint(ks[1], (F, W), 0, 2)
+    conns = jnp.zeros((W,), jnp.int32)
+    fused = jax.jit(lambda f, i, c: ref.sched_step_ref(f, i, c)[0])
+    us_fused = _time(fused, funcs, idle, conns)
+    events = jnp.stack([jnp.full((R,), ARRIVAL), funcs, jnp.full((R,), -1)], 1).astype(jnp.int32)
+    state = init_state(F, W)
+    scan = jax.jit(lambda s, e: sched_many(s, e)[1][0])
+    us_scan = _time(scan, state, events)
+    rows.append(("kernel/sched_burst_fused", us_fused, f"{us_fused/R:.2f} us/req"))
+    rows.append(("kernel/sched_burst_scan", us_scan,
+                 f"fused speedup={us_scan/max(us_fused,1e-9):.2f}x"))
+    payload["sched_fused_us"] = us_fused
+    payload["sched_scan_us"] = us_scan
+    save_json("kernels", payload)
+    return rows

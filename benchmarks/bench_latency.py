@@ -1,0 +1,30 @@
+"""Figures 10-12: response-latency CDF, means, and tail percentiles."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import SCHEDULERS, matrix, save_json, stats
+
+
+def run(quick: bool = False):
+    m = matrix(quick)
+    rows = []
+    payload = {}
+    for name in SCHEDULERS:
+        s = stats(m, name)
+        payload[name] = s
+        rows.append((f"latency_mean/{name}", s["mean_ms"] * 1e3, f"p99={s['p99']:.0f}ms"))
+    hiku = payload["hiku"]["mean_ms"]
+    for name in SCHEDULERS[1:]:
+        imp = (payload[name]["mean_ms"] - hiku) / payload[name]["mean_ms"] * 100
+        rows.append((f"latency_improvement_vs/{name}", imp * 1e3,
+                     f"paper=14.9-27.1% got={imp:.1f}%"))
+    imp99 = [
+        (payload[n]["p99"] - payload["hiku"]["p99"]) / payload[n]["p99"] * 100
+        for n in SCHEDULERS[1:]
+    ]
+    rows.append(("latency_p99_improvement_max", max(imp99) * 1e3,
+                 f"paper=up-to-36.4% got={max(imp99):.1f}%"))
+    save_json("fig10_12_latency", payload)
+    return rows

@@ -1,0 +1,20 @@
+"""Figure 16: cumulative processed requests (throughput)."""
+
+from __future__ import annotations
+
+from .common import SCHEDULERS, matrix, save_json
+
+
+def run(quick: bool = False):
+    m = matrix(quick)
+    rows = []
+    payload = {name: m[name]["n_requests"] for name in SCHEDULERS}
+    for name in SCHEDULERS:
+        rows.append((f"throughput_total/{name}", payload[name],
+                     f"paper: hiku=16414 others=12361-15151"))
+    hiku = payload["hiku"]
+    gains = [(hiku - payload[n]) / payload[n] * 100 for n in SCHEDULERS[1:]]
+    rows.append(("throughput_gain_range", max(gains) * 1e3,
+                 f"paper=8.3-32.8% got={min(gains):.1f}-{max(gains):.1f}%"))
+    save_json("fig16_throughput", payload)
+    return rows

@@ -1,0 +1,97 @@
+"""Shared benchmark harness: the paper's §V experiment matrix, run once.
+
+Protocol mirrors the paper: 5 workers, 40 functions (8 FunctionBench apps x 5
+copies, Azure-skewed weights), closed-loop VUs at {20, 50, 100}, equal time
+per VU level, N seeded runs per scheduler, identical seeded workloads across
+schedulers.  Results are cached in-process so every figure module reads the
+same matrix, and persisted to benchmarks/results/matrix.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import SimConfig, Simulator, make_scheduler, summarize
+from repro.core.metrics import latency_cdf, load_cv_per_second
+
+SCHEDULERS = ["hiku", "ch_bl", "least_connections", "random"]  # paper's four
+EXTRA_SCHEDULERS = ["ch", "rj_ch"]
+VU_LEVELS = [20, 50, 100]
+
+RESULTS_DIR = Path(__file__).parent / "results"
+
+
+def run_matrix(
+    schedulers: Sequence[str] = SCHEDULERS,
+    vu_levels: Sequence[int] = VU_LEVELS,
+    seeds: Sequence[int] = (0, 1, 2),
+    duration_s: float = 100.0,
+    quick: bool = False,
+) -> Dict:
+    if quick:
+        seeds = seeds[:1]
+        duration_s = 30.0
+    out: Dict[str, Dict] = {}
+    for name in schedulers:
+        per_sched = {"latency_ms": [], "cold": [], "cv_series": [], "per_vu_rps": {v: [] for v in vu_levels},
+                     "n_requests": 0, "duration_total": 0.0}
+        for seed in seeds:
+            for vus in vu_levels:
+                sched = make_scheduler(name, 5, seed=seed)
+                sim = Simulator(sched, cfg=SimConfig(), seed=seed * 1000 + vus)
+                recs = sim.run(n_vus=vus, duration_s=duration_s)
+                per_sched["latency_ms"].extend(r.latency_ms for r in recs)
+                per_sched["cold"].extend(1.0 if r.cold else 0.0 for r in recs)
+                cv = load_cv_per_second(sim.assignments, list(range(5)), duration_s)
+                per_sched["cv_series"].append(cv)
+                per_sched["per_vu_rps"][vus].append(len(recs) / duration_s)
+                per_sched["n_requests"] += len(recs)
+                per_sched["duration_total"] += duration_s
+        out[name] = per_sched
+    return out
+
+
+_MATRIX_CACHE: Dict[str, Dict] = {}
+
+
+def matrix(quick: bool = False) -> Dict:
+    key = "quick" if quick else "full"
+    if key not in _MATRIX_CACHE:
+        _MATRIX_CACHE[key] = run_matrix(quick=quick)
+    return _MATRIX_CACHE[key]
+
+
+def save_json(name: str, payload) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    p = RESULTS_DIR / f"{name}.json"
+
+    def default(o):
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        if isinstance(o, (np.floating, np.integer)):
+            return float(o)
+        raise TypeError(type(o))
+
+    p.write_text(json.dumps(payload, indent=1, default=default))
+    return p
+
+
+def stats(m: Dict, name: str) -> Dict[str, float]:
+    lat = np.array(m[name]["latency_ms"])
+    cold = np.array(m[name]["cold"])
+    cvs = np.concatenate([c for c in m[name]["cv_series"] if len(c)])
+    return {
+        "mean_ms": float(lat.mean()),
+        "p50": float(np.percentile(lat, 50)),
+        "p90": float(np.percentile(lat, 90)),
+        "p95": float(np.percentile(lat, 95)),
+        "p99": float(np.percentile(lat, 99)),
+        "cold_rate": float(cold.mean()),
+        "avg_cv": float(cvs.mean()),
+        "total_requests": int(m[name]["n_requests"]),
+    }

@@ -1,0 +1,25 @@
+"""Beyond-paper demo: Join-Idle-Queue microbatch dispatch for straggler
+mitigation in data-parallel training (DESIGN.md §2).
+
+    PYTHONPATH=src python examples/pull_training.py
+"""
+
+from repro.training.pull_dispatch import simulate_dispatch
+
+
+def main():
+    print("microbatch dispatch under stragglers: static vs pull-based (JIQ)")
+    print(f"{'scenario':<28}{'static':>9}{'pull':>9}{'gain':>7}")
+    for frac, slow in [(0.0, 1.0), (0.06, 2.0), (0.12, 3.0), (0.25, 4.0)]:
+        st, pu = simulate_dispatch(n_micro=256, n_replicas=16,
+                                   straggler_frac=frac, slowdown=slow, seed=3)
+        gain = (st.makespan - pu.makespan) / st.makespan * 100
+        label = f"{frac:.0%} stragglers x{slow:g}"
+        print(f"{label:<28}{st.makespan:>8.1f}s{pu.makespan:>8.1f}s{gain:>6.0f}%")
+    print("\npull-based dispatch = the paper's idle-queue discipline applied to")
+    print("DP replicas: idle replicas pull the next microbatch instead of")
+    print("waiting on a static assignment — same self-balancing effect.")
+
+
+if __name__ == "__main__":
+    main()

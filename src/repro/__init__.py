@@ -1,0 +1,3 @@
+"""repro — Hiku (pull-based serverless scheduling) as a JAX serving/training framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,29 @@
+from .base import (
+    ARCH_ALIASES,
+    ARCH_IDS,
+    SHAPES,
+    HybridConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    all_configs,
+    cells,
+    get_config,
+    register_config,
+)
+
+__all__ = [
+    "ARCH_ALIASES",
+    "ARCH_IDS",
+    "SHAPES",
+    "HybridConfig",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "all_configs",
+    "cells",
+    "get_config",
+    "register_config",
+]

@@ -1,0 +1,315 @@
+"""Model/config system: every assigned architecture is a ``ModelConfig``.
+
+``ModelConfig`` is a frozen dataclass covering dense / MoE / MLA / SSM /
+hybrid / encoder-decoder families.  Each architecture file in this package
+registers one full config (exact assigned hyperparameters) and every config
+can produce a ``reduced()`` version for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+# ---------------------------------------------------------------- subconfigs
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0            # shared (always-on) experts, DeepSeek-style
+    expert_dff: int = 0          # per-expert FFN width
+    router: str = "softmax"      # "softmax" (Mixtral) | "sigmoid" (DeepSeek-V3)
+    n_dense_layers: int = 0      # leading dense layers (DeepSeek-V3: 3)
+    dense_dff: int = 0           # FFN width of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def nheads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: shared transformer blocks interleaved with SSM layers."""
+
+    every: int = 6               # apply a shared block after every N ssm layers
+    n_shared_blocks: int = 2     # alternating shared blocks
+    concat_embedding: bool = True  # shared-block input = concat(h, embedding)
+
+
+# ------------------------------------------------------------------- config
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    # attention structure
+    sliding_window: Optional[int] = None   # SWA width (None = full)
+    global_every: Optional[int] = None     # gemma3: every Nth layer is global
+    attn_logit_softcap: Optional[float] = None
+    # block structure
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    norm_bias: bool = False
+    act: str = "silu"            # silu (SwiGLU) | gelu (GeGLU / plain)
+    gated_mlp: bool = True
+    use_bias: bool = False
+    parallel_block: bool = False  # Cohere: x + attn(n(x)) + mlp(n(x))
+    qk_norm: bool = False
+    # positions
+    rope: bool = True
+    rope_theta: float = 10_000.0
+    rope_theta_global: Optional[float] = None  # gemma3 global layers
+    learned_pos: bool = False
+    # embeddings / scaling
+    tied_embeddings: bool = True
+    scale_emb: float = 1.0        # MiniCPM: 12
+    depth_scale: float = 1.0      # MiniCPM residual scale 1.4/sqrt(L)
+    logit_soft_cap: Optional[float] = None
+    # families
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    n_encoder_layers: int = 0
+    # modality frontend stub: None | "audio" | "vision"
+    frontend: Optional[str] = None
+    n_frontend_tokens: int = 0    # vlm: patch tokens per example in train shape
+    # training
+    mtp_depth: int = 0            # DeepSeek-V3 multi-token prediction heads
+    lr_schedule: str = "cosine"   # minicpm: "wsd"
+    # notes recorded in DESIGN.md
+    source: str = ""
+
+    # ------------------------------------------------------------- derived
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (see DESIGN.md §4 skip list)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.sliding_window is not None:
+            return True  # SWA / mostly-local attention
+        return False
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, L = self.d_model, self.n_layers
+        hd = self.head_dim_
+        emb = self.vocab * d * (1 if self.tied_embeddings else 2)
+        total = emb
+        for layer in range(L):
+            total += self._layer_params(layer)
+        if self.enc_dec:
+            for _ in range(self.n_encoder_layers):
+                total += self._enc_layer_params()
+        return total
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.head_dim_
+        if self.mla is not None:
+            m = self.mla
+            qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            p = d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qk_hd
+            p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            p += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            p += self.n_heads * m.v_head_dim * d
+            return p
+        return d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+
+    def _mlp_params(self, d_ff: int) -> int:
+        mult = 3 if self.gated_mlp else 2
+        return mult * self.d_model * d_ff
+
+    def _ssm_params(self) -> int:
+        s = self.ssm
+        d = self.d_model
+        d_in = s.d_inner(d)
+        nh = s.nheads(d)
+        conv_dim = d_in + 2 * s.ngroups * s.d_state
+        p = d * (2 * d_in + 2 * s.ngroups * s.d_state + nh)  # in_proj
+        p += conv_dim * s.d_conv + d_in * d + 2 * nh  # conv, out_proj, A/D/dt_bias
+        return p
+
+    def _layer_params(self, layer: int) -> int:
+        if self.family == "ssm":
+            return self._ssm_params()
+        if self.family == "hybrid":
+            p = self._ssm_params()
+            h = self.hybrid
+            if (layer + 1) % h.every == 0:
+                # shared blocks amortized: count once per distinct block
+                pass
+            return p
+        p = self._attn_params()
+        if self.moe is not None and layer >= self.moe.n_dense_layers:
+            m = self.moe
+            p += (m.n_experts + m.n_shared) * self._mlp_params(m.expert_dff) // 1
+            p += self.d_model * m.n_experts  # router
+        elif self.moe is not None:
+            p += self._mlp_params(self.moe.dense_dff)
+        else:
+            p += self._mlp_params(self.d_ff)
+        return p
+
+    def _enc_layer_params(self) -> int:
+        return self._attn_params() + self._mlp_params(self.d_ff)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.n_params()
+        m = self.moe
+        d = self.d_model
+        emb = self.vocab * d * (1 if self.tied_embeddings else 2)
+        total = emb
+        for layer in range(self.n_layers):
+            p = self._attn_params()
+            if layer >= m.n_dense_layers:
+                p += (m.top_k + m.n_shared) * self._mlp_params(m.expert_dff)
+                p += d * m.n_experts
+            else:
+                p += self._mlp_params(m.dense_dff)
+            total += p
+        return total
+
+    # ------------------------------------------------------------- reduced
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw: Dict = {}
+        kw["n_layers"] = min(self.n_layers, 4 if self.family not in ("hybrid",) else 6)
+        kw["d_model"] = 64
+        kw["n_heads"] = 4
+        kw["n_kv_heads"] = min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4
+        kw["head_dim"] = 16
+        kw["d_ff"] = 128
+        kw["vocab"] = 256
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=4,
+                top_k=min(self.moe.top_k, 2),
+                expert_dff=64,
+                dense_dff=128 if self.moe.n_dense_layers else 0,
+                n_dense_layers=min(self.moe.n_dense_layers, 1),
+            )
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(
+                q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                qk_rope_head_dim=8, v_head_dim=16,
+            )
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(self.ssm, d_state=16, headdim=16, chunk=32)
+        if self.hybrid is not None:
+            kw["hybrid"] = dataclasses.replace(self.hybrid, every=3)
+            kw["n_layers"] = 6
+        if self.enc_dec:
+            kw["n_encoder_layers"] = 2
+            kw["n_layers"] = 2
+        if self.sliding_window is not None:
+            kw["sliding_window"] = 16
+        if self.n_frontend_tokens:
+            kw["n_frontend_tokens"] = 8
+        return dataclasses.replace(self, name=self.name + "-reduced", **kw)
+
+
+# ------------------------------------------------------------------- shapes
+
+#: assigned input shapes: name -> (seq_len, global_batch, step_kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "gemma3_4b",
+    "command_r_35b",
+    "minicpm_2b",
+    "command_r_plus_104b",
+    "whisper_small",
+    "mixtral_8x22b",
+    "deepseek_v3_671b",
+    "zamba2_2p7b",
+    "llava_next_mistral_7b",
+    "mamba2_130m",
+]
+
+# CLI ids (--arch) use dashes, matching the assignment sheet.
+ARCH_ALIASES = {a.replace("_", "-").replace("-2p7b", "-2.7b"): a for a in ARCH_IDS}
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register_config(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    key = ARCH_ALIASES.get(name, name).replace("-", "_")
+    if key not in _REGISTRY:
+        importlib.import_module(f"repro.configs.{key}")
+    return _REGISTRY[key]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    for a in ARCH_IDS:
+        get_config(a)
+    return dict(_REGISTRY)
+
+
+def cells(include_skipped: bool = True):
+    """Yield every (arch, shape, runnable, note) dry-run cell — 40 total."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape, (seq, batch, kind) in SHAPES.items():
+            note = ""
+            runnable = True
+            if shape == "long_500k" and not cfg.sub_quadratic:
+                runnable = False
+                note = "skipped: pure full-attention arch (DESIGN.md §4)"
+            if runnable or include_skipped:
+                yield arch, shape, runnable, note

@@ -1,0 +1,33 @@
+"""Core contribution of the paper: pull-based (Join-Idle-Queue) scheduling."""
+
+from . import baselines as _baselines  # noqa: F401  (registers schedulers)
+from . import hiku as _hiku  # noqa: F401
+from .hiku import HikuScheduler
+from .jax_sched import ARRIVAL, EVICT, FINISH, JIQState, init_state, sched_many, sched_step
+from .metrics import RunMetrics, latency_cdf, load_cv_per_second, summarize
+from .scheduler import Scheduler, available_schedulers, make_scheduler
+from .simulator import SimConfig, Simulator
+from .trace import FunctionSpec, make_functions, make_vu_programs
+
+__all__ = [
+    "ARRIVAL",
+    "EVICT",
+    "FINISH",
+    "FunctionSpec",
+    "HikuScheduler",
+    "JIQState",
+    "RunMetrics",
+    "Scheduler",
+    "SimConfig",
+    "Simulator",
+    "available_schedulers",
+    "init_state",
+    "latency_cdf",
+    "load_cv_per_second",
+    "make_functions",
+    "make_scheduler",
+    "make_vu_programs",
+    "sched_many",
+    "sched_step",
+    "summarize",
+]

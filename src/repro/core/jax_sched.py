@@ -1,0 +1,127 @@
+"""Pull-based scheduling as a composable JAX module (vectorized Algorithm 1).
+
+The control-plane scheduler in ``hiku.py`` is an event-driven Python object.
+For high-throughput request streams (and to make the paper's algorithm a
+first-class JAX citizen) this module expresses the *same* semantics as a pure
+state-transition over arrays, scannable with ``jax.lax`` and shardable over
+the worker axis:
+
+* ``idle[f, w]``  — multiset size of worker ``w``'s entries in ``PQ_f``
+  (one per enqueued idle instance).  Since ``PQ_f`` is priority-ordered by
+  load, dequeuing the min-load member is ``argmin_w(conns | idle[f,w]>0)`` —
+  the array form of a sorted queue; no order information is lost.
+* ``conns[w]``    — active connections (the priority key of Algorithm 1).
+
+Events are encoded as ``(kind, func, worker)`` int32 triples:
+  kind 0 = ARRIVAL(func)        -> returns (worker, warm) assignment
+  kind 1 = FINISH(func, worker) -> pull enqueue (Algorithm 1 l.13-16)
+  kind 2 = EVICT(func, worker)  -> notification   (Algorithm 1 l.17-20)
+
+Random tie-breaking uses the Gumbel-max trick over exact ties, matching the
+"random selection from W_min" of the fallback mechanism.
+
+``kernels/sched_step.py`` implements the ARRIVAL hot path as a fused Pallas
+kernel; ``kernels/ref.py`` points back at this module as the oracle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ARRIVAL, FINISH, EVICT = 0, 1, 2
+_INF = jnp.int32(2**30)
+
+
+class JIQState(NamedTuple):
+    idle: jax.Array   # (F, W) int32 — PQ_f membership multiset
+    conns: jax.Array  # (W,)  int32 — active connections
+
+
+def init_state(n_funcs: int, n_workers: int) -> JIQState:
+    return JIQState(
+        idle=jnp.zeros((n_funcs, n_workers), jnp.int32),
+        conns=jnp.zeros((n_workers,), jnp.int32),
+    )
+
+
+def _tie_break_argmin(scores: jax.Array, key: jax.Array | None) -> jax.Array:
+    """argmin with uniform random choice among exact ties (Gumbel-max)."""
+    if key is None:  # deterministic mode: first index wins
+        return jnp.argmin(scores)
+    m = scores.min()
+    tied = scores == m
+    g = jax.random.gumbel(key, scores.shape)
+    return jnp.argmax(jnp.where(tied, g, -jnp.inf))
+
+
+def sched_step(
+    state: JIQState, event: jax.Array, key: jax.Array | None = None
+) -> Tuple[JIQState, Tuple[jax.Array, jax.Array]]:
+    """One event transition.  Returns (state', (worker, warm)).
+
+    For FINISH/EVICT events the returned assignment is (-1, False).
+    """
+    kind, func, worker = event[0], event[1], event[2]
+    idle_f = state.idle[func]
+
+    # ---- ARRIVAL: pull mechanism, else least-connections fallback ----------
+    has_idle = jnp.any(idle_f > 0)
+    pull_scores = jnp.where(idle_f > 0, state.conns, _INF)
+    if key is not None:
+        k_pull, k_fb = jax.random.split(key)
+    else:
+        k_pull = k_fb = None
+    w_pull = _tie_break_argmin(pull_scores, k_pull)
+    w_fallback = _tie_break_argmin(state.conns, k_fb)
+    w_assign = jnp.where(has_idle, w_pull, w_fallback).astype(jnp.int32)
+
+    is_arrival = kind == ARRIVAL
+    is_finish = kind == FINISH
+    is_evict = kind == EVICT
+
+    # idle-queue updates
+    idle = state.idle
+    #   ARRIVAL dequeues (only if pulled); FINISH enqueues; EVICT removes one.
+    dec_arrival = (is_arrival & has_idle).astype(jnp.int32)
+    idle = idle.at[func, w_assign].add(-dec_arrival)
+    idle = idle.at[func, worker].add(is_finish.astype(jnp.int32))
+    idle = idle.at[func, worker].add(-(is_evict & (idle[func, worker] > 0)).astype(jnp.int32))
+    idle = jnp.maximum(idle, 0)
+
+    # connection counts
+    conns = state.conns
+    conns = conns.at[w_assign].add(is_arrival.astype(jnp.int32))
+    conns = conns.at[worker].add(-is_finish.astype(jnp.int32))
+    conns = jnp.maximum(conns, 0)
+
+    out_worker = jnp.where(is_arrival, w_assign, jnp.int32(-1))
+    out_warm = is_arrival & has_idle
+    return JIQState(idle, conns), (out_worker, out_warm)
+
+
+def sched_many(
+    state: JIQState, events: jax.Array, key: jax.Array | None = None
+) -> Tuple[JIQState, Tuple[jax.Array, jax.Array]]:
+    """Scan ``sched_step`` over an (N, 3) int32 event stream."""
+    n = events.shape[0]
+    keys = jax.random.split(key, n) if key is not None else None
+
+    def body(carry, xs):
+        if keys is None:
+            ev = xs
+            return sched_step(carry, ev, None)
+        ev, k = xs
+        return sched_step(carry, ev, k)
+
+    xs = events if keys is None else (events, keys)
+    return jax.lax.scan(body, state, xs)
+
+
+# ---------------------------------------------------------------- invariants
+def check_invariants(state: JIQState) -> bool:
+    """Structural invariants used by property tests."""
+    ok = bool(jnp.all(state.idle >= 0)) and bool(jnp.all(state.conns >= 0))
+    return ok

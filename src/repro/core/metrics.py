@@ -1,0 +1,80 @@
+"""Metrics of Section V: latency, cold-start rate, load imbalance (CV), throughput."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .simulator import RequestRecord
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    n_requests: int
+    mean_latency_ms: float
+    p50_ms: float
+    p90_ms: float
+    p95_ms: float
+    p99_ms: float
+    cold_rate: float
+    throughput_rps: float
+    load_cv: float  # avg coefficient of variation of assignments/worker/second
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def latency_cdf(records: Sequence[RequestRecord], n_points: int = 200) -> Tuple[np.ndarray, np.ndarray]:
+    lat = np.sort([r.latency_ms for r in records])
+    y = np.arange(1, len(lat) + 1) / len(lat)
+    if len(lat) > n_points:
+        idx = np.linspace(0, len(lat) - 1, n_points).astype(int)
+        return lat[idx], y[idx]
+    return lat, y
+
+
+def load_cv_per_second(
+    assignments: Sequence[Tuple[float, int]], workers: Sequence[int], t_end: float
+) -> np.ndarray:
+    """Per-1s-bin CV across workers of assignment counts (Figure 14).
+
+    The paper defines load imbalance as the coefficient of variation of the
+    number of requests assigned per worker per second.
+    """
+    if not assignments:
+        return np.zeros(0)
+    n_bins = int(np.ceil(t_end)) + 1
+    wid_index = {w: i for i, w in enumerate(workers)}
+    counts = np.zeros((n_bins, len(workers)))
+    for t, w in assignments:
+        if w in wid_index:
+            counts[min(int(t), n_bins - 1), wid_index[w]] += 1
+    active = counts.sum(axis=1) > 0
+    counts = counts[active]
+    mean = counts.mean(axis=1)
+    std = counts.std(axis=1)
+    return np.where(mean > 0, std / np.maximum(mean, 1e-12), 0.0)
+
+
+def summarize(
+    records: Sequence[RequestRecord],
+    assignments: Sequence[Tuple[float, int]],
+    workers: Sequence[int],
+    duration_s: float,
+) -> RunMetrics:
+    lat = np.array([r.latency_ms for r in records]) if records else np.zeros(1)
+    cold = np.array([r.cold for r in records]) if records else np.zeros(1)
+    cv = load_cv_per_second(assignments, workers, duration_s)
+    return RunMetrics(
+        n_requests=len(records),
+        mean_latency_ms=float(lat.mean()),
+        p50_ms=float(np.percentile(lat, 50)),
+        p90_ms=float(np.percentile(lat, 90)),
+        p95_ms=float(np.percentile(lat, 95)),
+        p99_ms=float(np.percentile(lat, 99)),
+        cold_rate=float(cold.mean()),
+        throughput_rps=len(records) / max(duration_s, 1e-9),
+        load_cv=float(cv.mean()) if cv.size else 0.0,
+    )

@@ -1,0 +1,106 @@
+"""Scheduler interface for the serverless control plane.
+
+The scheduler maps an incoming request for a function type to a worker id
+(Section III-A of the paper: ``S(r_i) = (w_j, t_exec)``; the execution time is
+decided by the worker/simulator, the scheduler only picks ``w_j``).
+
+Schedulers keep their *own view* of cluster state, fed exclusively through the
+callbacks below — exactly like the OpenLambda scheduler proxy the paper extends:
+
+* ``on_assign(w, f)``   — request dispatched to ``w`` (active connection opens).
+* ``on_finish(w, f)``   — worker reports completion (connection closes).  For
+  Hiku this is the *pull* signal: the worker enqueues itself in ``PQ_f``.
+* ``on_evict(w, f)``    — worker evicted an idle instance of ``f`` (keep-alive
+  timeout or memory pressure) and *notifies* the scheduler (Section IV-A,
+  notification mechanism).
+* ``on_worker_added/on_worker_removed`` — elastic scaling / failure events.
+"""
+
+from __future__ import annotations
+
+import abc
+import random
+from typing import Callable, Dict, List, Optional
+
+
+class Scheduler(abc.ABC):
+    """Base class; concrete schedulers implement ``select``."""
+
+    name: str = "base"
+
+    def __init__(self, n_workers: int, seed: int = 0):
+        self.n_workers = n_workers
+        self.workers: List[int] = list(range(n_workers))
+        self.rng = random.Random(seed)
+        # Scheduler-view active connections per worker (LC fallback et al.).
+        self.conns: Dict[int, int] = {w: 0 for w in self.workers}
+
+    # ------------------------------------------------------------------ API
+    @abc.abstractmethod
+    def select(self, func: str) -> int:
+        """Pick a worker for a request of function type ``func``."""
+
+    def schedule(self, func: str) -> int:
+        w = self.select(func)
+        self.on_assign(w, func)
+        return w
+
+    # ------------------------------------------------------------ callbacks
+    def on_assign(self, worker: int, func: str) -> None:
+        self.conns[worker] = self.conns.get(worker, 0) + 1
+
+    def on_finish(self, worker: int, func: str) -> None:
+        self.conns[worker] = max(0, self.conns.get(worker, 0) - 1)
+
+    def on_cancel(self, worker: int, func: str) -> None:
+        """Undo an assignment that never executed (failure race).
+
+        Unlike ``on_finish`` this must NOT signal idle capacity (no pull
+        enqueue in Hiku) — it only releases the connection count.
+        """
+        self.conns[worker] = max(0, self.conns.get(worker, 0) - 1)
+
+    def on_evict(self, worker: int, func: str) -> None:  # noqa: B027
+        """Sandbox-destruction notification; default: ignored."""
+
+    def on_worker_added(self, worker: int) -> None:
+        if worker not in self.conns:
+            self.workers.append(worker)
+            self.conns[worker] = 0
+            self.n_workers = len(self.workers)
+
+    def on_worker_removed(self, worker: int) -> None:
+        if worker in self.conns:
+            self.workers.remove(worker)
+            del self.conns[worker]
+            self.n_workers = len(self.workers)
+
+    # ------------------------------------------------------------- helpers
+    def _least_connections(self) -> int:
+        """Least-connections with random tie-breaking (Algorithm 1 l.8-10)."""
+        lmin = min(self.conns[w] for w in self.workers)
+        tied = [w for w in self.workers if self.conns[w] == lmin]
+        return self.rng.choice(tied)
+
+
+# Registry -----------------------------------------------------------------
+_REGISTRY: Dict[str, Callable[..., Scheduler]] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def make_scheduler(name: str, n_workers: int, seed: int = 0, **kw) -> Scheduler:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scheduler {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](n_workers, seed=seed, **kw)
+
+
+def available_schedulers() -> List[str]:
+    return sorted(_REGISTRY)

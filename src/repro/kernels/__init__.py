@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see ops.py)."""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

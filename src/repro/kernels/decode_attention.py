@@ -1,0 +1,109 @@
+"""Flash-decode: single-token attention against a long KV cache (Pallas TPU).
+
+The serve_step hot spot.  grid = (B, KH, n_kv_blocks) with the kv-block dim
+innermost; each (batch, kv-head) pair streams cache blocks through VMEM while
+the G = H/KH grouped query heads ride along as the MXU's M dimension
+(a (G, block_k) logit tile per step — GQA head packing).  Running
+(m, l, acc) statistics live in f32 VMEM scratch; the output is finalized on
+the last block.
+
+block_k defaults to 512: a (512, head_dim=128) f32 cache tile is 256 KiB —
+two of them (K and V) plus stats stay comfortably inside VMEM and keep the
+HBM stream long enough to saturate bandwidth (decode is memory-bound; see
+EXPERIMENTS.md §Roofline).
+
+The same (m, l, acc) merge combines *cross-device* partials under the
+context-parallel decode sharding (cache seq sharded over "model") — this
+kernel is the single-device block of that schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -2.0e38
+
+
+def _dec_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                *, scale, window, block_k, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = valid_ref[0]
+    k_start = ki * block_k
+    k_pos = k_start + jax.lax.iota(jnp.int32, block_k)
+    ok = k_pos <= valid
+    if window is not None:
+        ok &= (valid - k_pos) < window
+
+    @pl.when(jnp.any(ok))
+    def _tile():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)        # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (G, bk)
+        s = jnp.where(ok[None, :], s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0, :, :] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, H, hd)
+    k_cache: jax.Array,  # (B, S, KH, hd)
+    v_cache: jax.Array,
+    valid_len: jax.Array,  # scalar int32
+    window: Optional[int] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, KH, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // KH
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    n_k = S // block_k
+    qg = q.reshape(B, KH, G, hd)
+    valid = jnp.asarray(valid_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_dec_kernel, scale=1.0 / (hd ** 0.5), window=window,
+                               block_k=block_k, n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KH, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # valid_len scalar
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid, qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)

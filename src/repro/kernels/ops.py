@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to auto: Pallas kernels execute natively on TPU and in
+interpret mode elsewhere (this container is CPU-only, so tests/examples run
+the kernel bodies in interpret mode; the dry-run uses the XLA reference path
+— see DESIGN.md §6).  Wrappers handle padding/layout so call sites stay
+shape-clean.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import sched_step as _ss
+from . import ssd_scan as _ssd
+from . import ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128, interpret: Optional[bool] = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, valid_len, window: Optional[int] = None,
+                     block_k: int = 512, interpret: Optional[bool] = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _dec.decode_attention(q, k_cache, v_cache, valid_len, window=window,
+                                 block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_h", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128, block_h: int = 8,
+             interpret: Optional[bool] = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    if Bm.shape[2] != 1:  # kernel covers ngroups=1; general case -> oracle
+        return ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk)
+    S = x.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        x, dt, Bm, Cm = (jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+                         for t in (x, dt, Bm, Cm))
+    y, st = _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, block_h=block_h, interpret=interpret)
+    return (y[:, :S] if pad else y), st
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sched_step(funcs, idle, conns, interpret: Optional[bool] = None):
+    """Burst scheduling: pad workers to the 128-lane axis, run, unpad."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    F, W = idle.shape
+    padW = (-W) % 128 if not interpret else 0
+    if padW:
+        idle = jnp.pad(idle, ((0, 0), (0, padW)))
+        conns = jnp.pad(conns, (0, padW), constant_values=2**30)  # never selected
+    a, warm, idle2, conns2 = _ss.sched_step(funcs, idle, conns, interpret=interpret)
+    if padW:
+        idle2, conns2 = idle2[:, :W], conns2[:W]
+    return a, warm, idle2, conns2

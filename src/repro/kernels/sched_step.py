@@ -1,0 +1,87 @@
+"""Fused pull-based scheduling step (Algorithm 1 ARRIVAL burst) in Pallas.
+
+The paper's own hot path: for each request in a burst, (1) masked-argmin over
+workers with an idle instance of the requested function (the PQ_f dequeue),
+(2) least-connections argmin fallback, (3) connection/idle-table updates that
+the *next* request in the burst observes.  The sequential dependence makes
+this a scan — fused here into one kernel invocation so the whole burst costs
+one dispatch (vs. one XLA scan iteration each; see benchmarks/bench_kernels).
+
+Layout: workers live on the 128-lane axis (W padded to a lane multiple by
+ops.py, padding masked with +INF connections); the idle table rows for the
+burst's functions are resident in VMEM; the request loop is a fori_loop with
+dynamic row loads — the TPU analogue of the paper's Go scheduler loop.
+
+Tie-breaking is deterministic (lowest index), matching ``ref.sched_step_ref``;
+the randomized tie-break of Algorithm 1 lives in the control plane
+(core/jax_sched.py) where a PRNG key is available.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INF = 2**30  # python int: jnp scalars would be captured as kernel constants
+
+
+def _sched_kernel(funcs_ref, idle_ref, conns_ref, assign_ref, warm_ref, idle_out, conns_out):
+    idle_out[...] = idle_ref[...]
+    conns_out[...] = conns_ref[...]
+    R = funcs_ref.shape[0]
+    W = conns_ref.shape[0]
+
+    def body(i, _):
+        f = funcs_ref[i]
+        row = pl.load(idle_out, (pl.dslice(f, 1), slice(None)))[0]  # (W,)
+        conns = conns_out[...]
+        has_idle = jnp.any(row > 0)
+        pull_scores = jnp.where(row > 0, conns, _INF)
+        w_pull = jnp.argmin(pull_scores).astype(jnp.int32)
+        w_fb = jnp.argmin(conns).astype(jnp.int32)
+        w = jnp.where(has_idle, w_pull, w_fb)
+        # dequeue from PQ_f (if pulled) + open connection
+        dec = has_idle.astype(jnp.int32)
+        old_row = pl.load(idle_out, (pl.dslice(f, 1), pl.dslice(w, 1)))
+        pl.store(idle_out, (pl.dslice(f, 1), pl.dslice(w, 1)), old_row - dec)
+        old_c = pl.load(conns_out, (pl.dslice(w, 1),))
+        pl.store(conns_out, (pl.dslice(w, 1),), old_c + 1)
+        pl.store(assign_ref, (pl.dslice(i, 1),), w[None])
+        pl.store(warm_ref, (pl.dslice(i, 1),), has_idle[None].astype(jnp.int32))
+        return 0
+
+    jax.lax.fori_loop(0, R, body, 0)
+
+
+def sched_step(
+    funcs: jax.Array,  # (R,) int32
+    idle: jax.Array,   # (F, W) int32
+    conns: jax.Array,  # (W,) int32
+    interpret: bool = False,
+):
+    """Returns (assign (R,), warm (R,) int32, idle', conns')."""
+    R = funcs.shape[0]
+    F, W = idle.shape
+    return pl.pallas_call(
+        _sched_kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((F, W), lambda: (0, 0)),
+            pl.BlockSpec((W,), lambda: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((F, W), lambda: (0, 0)),
+            pl.BlockSpec((W,), lambda: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((F, W), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(funcs, idle, conns)

@@ -1,0 +1,104 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+grid = (B, n_head_blocks, n_chunks) with chunks innermost: the (bh, P, N)
+f32 carry state lives in VMEM scratch and is threaded through the sequential
+chunk iterations (reset at chunk 0) — the inter-chunk linear recurrence of
+the SSD algorithm.  Within a chunk the quadratic (attention-like) form runs
+on MXU-shaped tiles.
+
+Head-blocking keeps the VMEM working set bounded: at (block_h=8, Q=128,
+P=64, N=128) the resident tiles are
+  x (Q,bh,P) 256KiB + L (Q,Q,bh) 512KiB + state (bh,P,N) 256KiB + B/C (Q,N)
+well under budget.  ngroups=1 (both assigned SSM archs) — B/C tiles are
+shared across the head block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0].astype(jnp.float32)       # (Q, bh, P)
+    dt = dt_ref[0].astype(jnp.float32)     # (Q, bh)
+    A = a_ref[...].astype(jnp.float32)     # (bh,)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)  # (Q, N)
+    Q = x.shape[0]
+
+    dA = dt * A[None, :]                   # (Q, bh)
+    cs = jnp.cumsum(dA, axis=0)            # (Q, bh)
+    # L[q, k, h] = exp(cs_q - cs_k) for q >= k
+    diff = cs[:, None, :] - cs[None, :, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where((ki <= qi)[:, :, None], jnp.exp(diff), 0.0)  # (Q, Q, bh)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (Q, Q)
+    y_intra = jnp.einsum("qk,qkh,kh,khp->qhp", scores, L, dt, x)
+
+    h_in = state[...]                       # (bh, P, N)
+    y_inter = jnp.einsum("qn,hpn,qh->qhp", Cm, h_in, jnp.exp(cs))
+
+    decay_end = jnp.exp(cs[-1][None, :] - cs) * dt  # (Q, bh)
+    st_chunk = jnp.einsum("qh,qn,qhp->hpn", decay_end, Bm, x)
+    state[...] = h_in * jnp.exp(cs[-1])[:, None, None] + st_chunk
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+    st_ref[0] = state[...].astype(st_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  post-softplus
+    A: jax.Array,   # (H,) negative
+    Bm: jax.Array,  # (B, S, 1, N)  (ngroups=1)
+    Cm: jax.Array,  # (B, S, 1, N)
+    chunk: int = 128,
+    block_h: int = 8,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert Bm.shape[2] == 1, "kernel supports ngroups=1 (both assigned SSM archs)"
+    assert S % chunk == 0, (S, chunk)
+    if H % block_h != 0:
+        block_h = H
+    nc = S // chunk
+    nhb = H // block_h
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(B, nhb, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_h, P), lambda b, hb, ci: (b, ci, hb, 0)),
+            pl.BlockSpec((1, chunk, block_h), lambda b, hb, ci: (b, ci, hb)),
+            pl.BlockSpec((block_h,), lambda b, hb, ci: (hb,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, hb, ci: (b, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, hb, ci: (b, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_h, P), lambda b, hb, ci: (b, ci, hb, 0)),
+            pl.BlockSpec((1, block_h, P, N), lambda b, hb, ci: (b, hb, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_h, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, st

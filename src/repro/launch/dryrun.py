@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  REPRO_DRYRUN_DEVICES overrides for small CI meshes.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['REPRO_DRYRUN_DEVICES']}"
+    )
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+  lower the step function with abstract inputs -> compile -> record
+  memory_analysis / cost_analysis / collective schedule, and write one JSON
+  per cell under --out (benchmarks/results/dryrun by default).  Incremental:
+  existing JSONs are skipped unless --force.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                   # all cells, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape decode_32k --mesh single
+  REPRO_DRYRUN_DEVICES=16 ... --mesh-shape 4x4                   # reduced CI mesh
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.base import ARCH_ALIASES, ARCH_IDS, SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import step_fn_and_specs
+from repro.sharding.rules import make_plan
+from repro.utils.hlo import collective_stats, op_census, total_collective_bytes
+
+# TPU v5e hardware constants (per chip) — roofline denominators.
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+
+def _mesh_from_arg(mesh_arg: str, mesh_shape: str | None):
+    if mesh_shape:
+        dims = tuple(int(x) for x in mesh_shape.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):] if len(dims) == 3 else ("data", "model")
+        return jax.make_mesh(dims, axes), mesh_arg
+    return make_production_mesh(multi_pod=(mesh_arg == "multi")), mesh_arg
+
+
+def sharded_arg_bytes(args, shardings, mesh) -> int:
+    """Exact per-device resident bytes of the step inputs."""
+    total = 0
+
+    def one(sds, sh):
+        nonlocal total
+        n = int(np.prod(sds.shape)) * sds.dtype.itemsize
+        if hasattr(sh, "spec"):
+            denom = 1
+            for entry in sh.spec:
+                if entry is None:
+                    continue
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    denom *= mesh.shape[ax]
+            n //= max(denom, 1)
+        total += n
+
+    jax.tree.map(one, args, shardings,
+                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return total
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str, plan=None, remat=True,
+             level: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, plan = step_fn_and_specs(
+        cfg, shape, mesh, plan=plan, remat=remat, level=level)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo, default_trip=cfg.n_layers)
+    traffic_b, result_b = total_collective_bytes(coll)
+    census = op_census(hlo)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    seq, batch, kind = SHAPES[shape]
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    arg_bytes = sharded_arg_bytes(args, in_sh, mesh)
+    out_bytes = 0
+    if out_sh is not None:
+        try:
+            out_sds = jax.eval_shape(fn, *args)
+            out_bytes = sharded_arg_bytes(out_sds, out_sh, mesh)
+        except Exception:
+            pass
+    # terms are seconds-per-step on the per-device partitioned module.
+    # memory: XLA:CPU 'bytes accessed' is pre-fusion and bf16-upcast-inflated;
+    # the analytic term (inputs read once + outputs written once) is the
+    # TPU-realistic floor and is what §Roofline tabulates. Both recorded.
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = (arg_bytes + out_bytes) / HBM_BW
+    memory_s_xla = bytes_dev / HBM_BW
+    collective_s = traffic_b / ICI_BW
+
+    n_tok = batch * (1 if kind == "decode" else seq)
+    n_active = cfg.n_active_params()
+    model_flops = (6 if kind == "train" else 2) * n_active * n_tok
+    hlo_total = flops_dev * n_chips
+
+    out = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "mesh_shape": {k: int(v) for k, v in mesh.shape.items()},
+        "plan": plan.name,
+        "kind": kind,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "arg_bytes_per_device": arg_bytes,
+        "out_bytes_per_device": out_bytes,
+        "cost_analysis": cost_d,
+        "collectives": coll,
+        "collective_traffic_bytes_per_device": traffic_b,
+        "collective_result_bytes_per_device": result_b,
+        "op_census": census,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "memory_s_xla": memory_s_xla,
+            "collective_s": collective_s,
+            "dominant": max(
+                ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+                key=lambda kv: kv[1],
+            )[0],
+            "model_flops": model_flops,
+            "hlo_flops_total": hlo_total,
+            "useful_flops_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        },
+    }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all"] + list(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mesh-shape", default=None, help="override e.g. 4x4 (CI)")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--plan", default=None, help="fsdp|tp|tp+seqshard override")
+    ap.add_argument("--level", default="baseline", choices=["baseline", "opt"],
+                    help="opt = hillclimb levers (shard_map EP MoE, ws decode)")
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    args = ap.parse_args(argv)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if args.arch == "all" else [ARCH_ALIASES.get(args.arch, args.arch).replace("-", "_")]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    plan = None
+    if args.plan:
+        plan = make_plan(args.plan, fsdp="fsdp" in args.plan, seq_shard="seqshard" in args.plan)
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_name in meshes:
+        mesh, _ = _mesh_from_arg(mesh_name, args.mesh_shape)
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape in shapes:
+                cell_id = f"{arch}__{shape}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+                path = outdir / f"{cell_id}.json"
+                if path.exists() and not args.force:
+                    print(f"[skip-cached] {cell_id}")
+                    n_ok += 1
+                    continue
+                if shape == "long_500k" and not cfg.sub_quadratic:
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "skipped": True,
+                        "note": "pure full-attention arch; see DESIGN.md §4",
+                    }, indent=1))
+                    print(f"[skip-noted ] {cell_id}")
+                    n_skip += 1
+                    continue
+                try:
+                    res = run_cell(arch, shape, mesh, mesh_name, plan=plan,
+                                   remat=not args.no_remat, level=args.level)
+                    path.write_text(json.dumps(res, indent=1))
+                    r = res["roofline"]
+                    print(
+                        f"[ok] {cell_id}: compile={res['compile_s']}s "
+                        f"flops/dev={res['cost_analysis'].get('flops', 0):.3e} "
+                        f"terms(c/m/coll)={r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+                        f"{r['collective_s']:.2e}s dominant={r['dominant']}",
+                        flush=True,
+                    )
+                    n_ok += 1
+                except Exception:
+                    n_fail += 1
+                    err = traceback.format_exc()
+                    (outdir / f"{cell_id}.FAILED.txt").write_text(err)
+                    print(f"[FAIL] {cell_id}:\n{err}", flush=True)
+    print(f"dryrun done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

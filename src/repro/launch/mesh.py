@@ -1,0 +1,23 @@
+"""Production mesh definitions (see MULTI-POD DRY-RUN spec).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The single-pod mesh is
+16x16 = 256 chips ("data", "model"); the multi-pod mesh is 2x16x16 = 512
+chips ("pod", "data", "model") — the "pod" axis composes with "data" for
+batch/FSDP sharding and carries the cross-pod (DCN) collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs of the sharded code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,147 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape_name)`` returns the exact abstract inputs each step
+function consumes — weak-type-correct, shardable, zero device allocation.
+``step_fn_and_specs`` assembles the full (fn, args, in_shardings) triple for
+train / prefill / decode cells, including abstract params, optimizer state
+and KV caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import SHAPES, ModelConfig
+from ..models import build_model, unzip
+from ..models.frontends import AUDIO_MEMORY_T
+from ..sharding.rules import ShardingPlan, auto_plan, logical_to_mesh, param_shardings
+from ..training.optimizer import OptConfig, OptState
+from ..training.train_step import make_serve_steps, make_train_step
+
+import os as _os
+
+PARAM_DTYPE = jnp.bfloat16
+#: KV-cache dtype; REPRO_CACHE_DTYPE=float8_e4m3fn halves the decode memory
+#: term (§Perf iteration: fp8 KV, the vLLM-style serving trade-off).
+CACHE_DTYPE = getattr(jnp, _os.environ.get("REPRO_CACHE_DTYPE", "bfloat16"))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def whisper_decoder_len(seq: int) -> int:
+    return max(seq // 8, 8)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one assigned shape (tokens/frames/patches)."""
+    seq, batch, kind = SHAPES[shape_name]
+    if kind == "decode":
+        return {"tokens": _sds((batch, 1), jnp.int32)}
+    if cfg.enc_dec:
+        return {
+            "frames": _sds((batch, seq, cfg.d_model), PARAM_DTYPE),
+            "tokens": _sds((batch, whisper_decoder_len(seq)), jnp.int32),
+        }
+    specs = {"tokens": _sds((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patches"] = _sds((batch, cfg.n_frontend_tokens, cfg.d_model), PARAM_DTYPE)
+    return specs
+
+
+def batch_axes(cfg: ModelConfig, shape_name: str) -> Dict[str, tuple]:
+    seq, batch, kind = SHAPES[shape_name]
+    if kind == "decode":
+        return {"tokens": ("batch", None)}
+    ax = {"tokens": ("batch", "seq")}
+    if cfg.enc_dec:
+        ax["frames"] = ("batch", "seq", "embed")
+    if cfg.family == "vlm":
+        ax["patches"] = ("batch", None, "embed")
+    return ax
+
+
+def abstract_params(model, max_seq: int = 4096):
+    p = jax.eval_shape(lambda k: model.init(k, max_seq=max_seq), jax.random.key(0))
+    return unzip(p)
+
+
+def step_fn_and_specs(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    plan: Optional[ShardingPlan] = None,
+    remat: bool = True,
+    level: str = "baseline",
+):
+    """Returns (fn, arg_specs, in_shardings, out_shardings|None, plan)."""
+    seq, batch, kind = SHAPES[shape_name]
+    n_model = mesh.shape.get("model", 1)
+    plan = plan or auto_plan(cfg, kind, n_model=n_model, batch=batch, level=level)
+    model = build_model(cfg, param_dtype=PARAM_DTYPE, remat=remat)
+
+    max_seq = seq if (cfg.enc_dec or kind != "train") else seq
+    params_sds, axes = abstract_params(model, max_seq=max_seq)
+    p_shard = param_shardings(mesh, plan, axes, params_sds)
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    batch_sds = input_specs(cfg, shape_name)
+    b_ax = batch_axes(cfg, shape_name)
+    b_shard = {
+        k: logical_to_mesh(mesh, plan.activation_rules, b_ax[k], v.shape)
+        for k, v in batch_sds.items()
+    }
+
+    if kind == "train":
+        opt_sds = OptState(
+            m=jax.tree.map(lambda s: _sds(s.shape, jnp.float32), params_sds),
+            v=jax.tree.map(lambda s: _sds(s.shape, jnp.float32), params_sds),
+            step=_sds((), jnp.int32),
+        )
+        opt_shard = OptState(m=p_shard, v=p_shard, step=repl)
+        fn = make_train_step(model, mesh, plan, OptConfig(schedule=cfg.lr_schedule))
+        args = (params_sds, opt_sds, batch_sds)
+        in_sh = (p_shard, opt_shard, b_shard)
+        metrics_sds = jax.eval_shape(fn, *args)[2]
+        out_sh = (p_shard, opt_shard, jax.tree.map(lambda _: repl, metrics_sds))
+        return fn, args, in_sh, out_sh, plan
+
+    def _cache_shardings(cache_tree):
+        c_ax = model.cache_axes()
+        return jax.tree.map(
+            lambda names, s: logical_to_mesh(mesh, plan.activation_rules, names, s.shape),
+            c_ax,
+            cache_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(i, (str, type(None))) for i in x),
+        )
+
+    if kind == "prefill":
+        prefill_step, _ = make_serve_steps(model, mesh, plan)
+        args = (params_sds, batch_sds)
+        in_sh = (p_shard, b_shard)
+        cache_out, logits_out = jax.eval_shape(prefill_step, *args)
+        logits_sh = logical_to_mesh(
+            mesh, plan.activation_rules, ("batch", "vocab"), logits_out.shape
+        )
+        out_sh = (_cache_shardings(cache_out), logits_sh)
+        return prefill_step, args, in_sh, out_sh, plan
+
+    # decode
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(batch, seq, dtype=CACHE_DTYPE, memory_t=AUDIO_MEMORY_T)
+    )
+    cache_shard = _cache_shardings(cache_sds)
+    _, decode_step = make_serve_steps(model, mesh, plan)
+    args = (params_sds, batch_sds["tokens"], cache_sds, _sds((), jnp.int32))
+    in_sh = (p_shard, b_shard["tokens"], cache_shard, repl)
+    logits_out, cache_out = jax.eval_shape(decode_step, *args)
+    logits_sh = logical_to_mesh(mesh, plan.activation_rules, ("batch", "vocab"), logits_out.shape)
+    out_sh = (logits_sh, _cache_shardings(cache_out))
+    return decode_step, args, in_sh, out_sh, plan

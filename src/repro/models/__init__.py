@@ -1,0 +1,4 @@
+from .layers import Param, is_param, stack_params, unzip
+from .model import Model, build_model
+
+__all__ = ["Model", "Param", "build_model", "is_param", "stack_params", "unzip"]

@@ -1,0 +1,28 @@
+"""Modality frontend STUBS (per assignment: backbone only, frontend stubbed).
+
+``[audio]`` / ``[vlm]`` architectures receive *precomputed* frame/patch
+embeddings through ``input_specs()``; these helpers document the shapes and
+provide synthetic embeddings for smoke tests and examples.
+
+* whisper-small — the conv1d x2 + GELU frontend that maps 80-mel spectrogram
+  frames to d_model embeddings is stubbed: inputs are post-conv frames
+  (B, T, 768).  Real Whisper: T=1500 for 30 s audio.
+* llava-next — the CLIP-ViT anyres tower + 2-layer MLP projector is stubbed:
+  inputs are pre-projected patch embeddings (B, 2880, 4096); anyres tiling of
+  a 672x672 image = (4 tiles + 1 base) x 576 patches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+AUDIO_MEMORY_T = 1500  # whisper 30s encoder length used by serving
+
+
+def synth_audio_frames(key, batch: int, t: int, d_model: int, dtype=jnp.float32):
+    return jax.random.normal(key, (batch, t, d_model), dtype) * 0.02
+
+
+def synth_patches(key, batch: int, n_patches: int, d_model: int, dtype=jnp.float32):
+    return jax.random.normal(key, (batch, n_patches, d_model), dtype) * 0.02

@@ -1,0 +1,193 @@
+"""Parameter system + common layers (functional JAX, no framework deps).
+
+Parameters are nested dicts with ``Param`` leaves carrying *logical axis
+names* alongside the array.  ``unzip`` splits a Param tree into a value tree
+(used by forward passes) and an axes tree (consumed by sharding/rules.py to
+build NamedShardings) — keeping the definition and its sharding metadata in
+one place, MaxText-style.
+
+Logical axes used across the zoo:
+  "embed"   — d_model dims            "mlp"     — FFN hidden dims
+  "heads"   — query-head dims         "kv_heads"— kv-head dims
+  "head_dim"— per-head dims           "vocab"   — vocabulary dims
+  "experts" — MoE expert dims         "layers"  — scanned-layer stacking dim
+  "ssm_inner"/"ssm_heads"/"ssm_state" — Mamba dims
+  "q_lora"/"kv_lora" — MLA latent dims
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def param(
+    key: jax.Array,
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    dtype=jnp.float32,
+    scale: Optional[float] = None,
+    init: str = "normal",
+) -> Param:
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+            scale = 1.0 / np.sqrt(fan_in)
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return Param(v, tuple(axes))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip(tree):
+    """Param tree -> (values tree, axes tree)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def stack_params(trees):
+    """Stack per-layer Param trees along a leading "layers" axis (for scan)."""
+
+    def _stack(*ps):
+        return Param(jnp.stack([p.value for p in ps]), ("layers",) + ps[0].axes)
+
+    return jax.tree_util.tree_map(_stack, *trees, is_leaf=is_param)
+
+
+# ------------------------------------------------------------------- layers
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array], eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def init_norm(key, cfg, axes=("embed",), dim=None) -> Dict[str, Param]:
+    dim = dim if dim is not None else cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": param(key, (dim,), axes, init="zeros")}  # (1+scale) form
+    out = {"scale": param(key, (dim,), axes, init="ones")}
+    if cfg.norm_bias:
+        out["bias"] = param(key, (dim,), axes, init="zeros")
+    return out
+
+
+def apply_norm(p: Dict[str, jax.Array], x: jax.Array, cfg) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p.get("bias"))
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(key, cfg, d_ff: Optional[int] = None, dtype=jnp.float32) -> Dict[str, Param]:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {}
+    if cfg.gated_mlp:
+        p["wi_gate"] = param(ks[0], (d, d_ff), ("embed", "mlp"), dtype)
+        p["wi_up"] = param(ks[1], (d, d_ff), ("embed", "mlp"), dtype)
+    else:
+        p["wi_up"] = param(ks[1], (d, d_ff), ("embed", "mlp"), dtype)
+    p["wo"] = param(ks[2], (d_ff, d), ("mlp", "embed"), dtype)
+    if cfg.use_bias:
+        p["bi"] = param(ks[3], (d_ff,), ("mlp",), dtype, init="zeros")
+        p["bo"] = param(ks[3], (d,), ("embed",), dtype, init="zeros")
+    return p
+
+
+def apply_mlp(p, x: jax.Array, cfg) -> jax.Array:
+    act = act_fn(cfg.act)
+    up = x @ p["wi_up"]
+    if "bi" in p:
+        up = up + p["bi"]
+    h = act(x @ p["wi_gate"]) * up if "wi_gate" in p else act(up)
+    y = h @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: (..., S) int32; theta scalar."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- embeddings
+def init_embedding(key, cfg, dtype=jnp.float32) -> Dict[str, Param]:
+    ks = jax.random.split(key, 2)
+    p = {"tokens": param(ks[0], (cfg.vocab, cfg.d_model), ("vocab", "embed"), dtype, scale=0.02)}
+    if not cfg.tied_embeddings:
+        p["unembed"] = param(ks[1], (cfg.d_model, cfg.vocab), ("embed", "vocab"), dtype)
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array, cfg, dtype) -> jax.Array:
+    x = p["tokens"][tokens].astype(dtype)
+    return x * jnp.asarray(cfg.scale_emb, dtype) if cfg.scale_emb != 1.0 else x
+
+
+def unembed(p, x: jax.Array, cfg) -> jax.Array:
+    if cfg.tied_embeddings:
+        logits = x @ p["tokens"].astype(x.dtype).T
+        if cfg.scale_emb != 1.0:  # MiniCPM: logits scaled by 1/(d/db); fold into emb scale
+            logits = logits / jnp.asarray(cfg.scale_emb, x.dtype)
+    else:
+        logits = x @ p["unembed"].astype(x.dtype)
+    if cfg.logit_soft_cap:
+        c = cfg.logit_soft_cap
+        logits = c * jnp.tanh(logits / c)
+    return logits

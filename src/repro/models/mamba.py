@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill + O(1) decode.
+
+Follows the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks; within a chunk the quadratic (attention-like) form is
+used, across chunks a linear recurrence carries the (H, P, N) state.  This
+pure-jnp version is both the reference for the Pallas ``ssd_scan`` kernel and
+the XLA path used by the dry-run.
+
+Decode keeps (conv_state, ssm_state) per layer and costs O(1) per token —
+the reason mamba2/zamba2 run the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .layers import Param, param, rmsnorm
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, conv_dim)
+    ssm: jax.Array   # (B, H, P, N)
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.nheads(cfg.d_model)
+    return s, d_in, H, s.headdim, s.d_state, s.ngroups
+
+
+def init_mamba(key, cfg, dtype=jnp.float32) -> Dict:
+    s, d_in, H, P, N, G = _dims(cfg)
+    d = cfg.d_model
+    conv_dim = d_in + 2 * G * N
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * d_in + 2 * G * N + H  # [z, x, B, C, dt]
+    return {
+        "in_proj": param(ks[0], (d, in_dim), ("embed", "ssm_inner"), dtype),
+        "conv_w": param(ks[1], (s.d_conv, conv_dim), (None, "ssm_inner"), dtype, scale=0.5),
+        "conv_b": param(ks[2], (conv_dim,), ("ssm_inner",), dtype, init="zeros"),
+        "A_log": param(ks[3], (H,), ("ssm_heads",), jnp.float32, init="zeros"),
+        "D": param(ks[3], (H,), ("ssm_heads",), jnp.float32, init="ones"),
+        "dt_bias": param(ks[4], (H,), ("ssm_heads",), jnp.float32, init="zeros"),
+        "norm": param(ks[4], (d_in,), ("ssm_inner",), init="zeros"),
+        "out_proj": param(ks[5], (d_in, d), ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s, d_in, H, P, N, G = _dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + d_in + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array, prev: jax.Array = None):
+    """Depthwise causal conv over (B, S, C); ``prev``: (B, K-1, C) history."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+    xpad = jnp.concatenate([prev, xBC], axis=1)
+    out = sum(xpad[:, i : i + xBC.shape[1]] * w[i] for i in range(K))
+    new_prev = xpad[:, xpad.shape[1] - (K - 1) :]
+    return jax.nn.silu(out + b), new_prev
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """L[..., i, j] = sum_{k=j+1..i} dA_k for i >= j else -inf. dA: (..., Q)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (post-softplus, >0)
+    A: jax.Array,   # (H,) negative
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    chunk: int,
+    init_state: jax.Array = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """SSD chunked scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(B_, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(B_, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, chunk, G, N).astype(f32)
+    Cc = Cm.reshape(B_, nc, chunk, G, N).astype(f32)
+    BH = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    CH = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A.astype(f32)  # (B,nc,Q,H)
+    dA_t = jnp.moveaxis(dA, -1, -2)  # (B,nc,H,Q)
+    L = jnp.exp(_segsum(dA_t))  # (B,nc,H,Q,Q)
+
+    # intra-chunk (quadratic) term   (c = chunk idx, s = state dim)
+    scores = jnp.einsum("bcqhs,bckhs->bchqk", CH, BH) * L
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores, dtc, xc)
+
+    # chunk states: decay from position j to chunk end
+    cs = jnp.cumsum(dA_t, axis=-1)
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)  # (B,nc,H,Q)
+    states = jnp.einsum("bchq,bcqh,bcqhs,bcqhp->bchps", decay_to_end, dtc, BH, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[..., -1])  # (B,nc,H)
+    h0 = jnp.zeros((B_, H, P, N), f32) if init_state is None else init_state.astype(f32)
+
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    (h_final, h_prev) = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    # inter-chunk contribution: C_i . (decay_from_start * h_prev)
+    decay_from_start = jnp.exp(cs)  # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqhs,bchps,bchq->bcqhp", CH, h_prev, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y, h_final
+
+
+def mamba_forward(
+    p, x: jax.Array, cfg, init_state: MambaState = None
+) -> Tuple[jax.Array, MambaState]:
+    """Full-sequence Mamba2 block. x: (B, S, d)."""
+    s, d_in, H, P, N, G = _dims(cfg)
+    B_, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    prev = init_state.conv if init_state is not None else None
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], prev)
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B_, S, H, P)
+    Bm = Bm.reshape(B_, S, G, N)
+    Cm = Cm.reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xs = shard(xs, ("batch", "seq", "ssm_heads", None))
+    pad = (-S) % s.chunk
+    if pad:
+        xs, dt, Bm, Cm = (jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2)) for t in (xs, dt, Bm, Cm))
+    ssm0 = init_state.ssm if init_state is not None else None
+    y, h = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk, ssm0)
+    if pad:
+        y = y[:, :S]
+    y = y + xs[:, :S] * p["D"][None, None, :, None]  # skip connection (D term)
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"], MambaState(conv_state, h)
+
+
+def mamba_decode(p, x: jax.Array, cfg, state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """One-token step. x: (B, 1, d); O(1) state update."""
+    s, d_in, H, P, N, G = _dims(cfg)
+    B_ = x.shape[0]
+    zxbcdt = x[:, 0] @ p["in_proj"]  # (B, in_dim)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # conv update
+    conv = jnp.concatenate([state.conv, xBC[:, None, :]], axis=1)  # (B,K,C)
+    w = p["conv_w"]
+    out = jnp.einsum("bkc,kc->bc", conv, w) + p["conv_b"]
+    xBC = jax.nn.silu(out)
+    new_conv = conv[:, 1:]
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B_, H, P)
+    Bm = Bm.reshape(B_, G, N)
+    Cm = Cm.reshape(B_, G, N)
+    rep = H // G
+    BH = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    CH = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (B,H)
+    h = state.ssm * dA[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, BH.astype(jnp.float32), xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", CH.astype(jnp.float32), h) + xs * p["D"][None, :, None]
+    y = y.reshape(B_, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return (y @ p["out_proj"])[:, None, :], MambaState(new_conv, h)
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> MambaState:
+    s, d_in, H, P, N, G = _dims(cfg)
+    conv_dim = d_in + 2 * G * N
+    return MambaState(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, H, P, N), jnp.float32),
+    )

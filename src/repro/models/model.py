@@ -1,0 +1,473 @@
+"""Model assembly: build init/forward/loss/prefill/decode for any ModelConfig.
+
+One entry point serves all 10 assigned architectures:
+
+    model = build_model(get_config("gemma3-4b"))
+    params = model.init(jax.random.key(0))
+    loss, metrics = model.loss(params, {"tokens": ...})
+    cache = model.init_cache(batch, seq)
+    logits, cache = model.decode_step(params, tok, cache, cache_index)
+
+Families: decoder-only LM (dense/moe/vlm), SSM (mamba2), hybrid (zamba2),
+encoder-decoder audio (whisper).  See DESIGN.md §4 for derivations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .attention import GLOBAL_WINDOW, attn_decode, attn_forward, init_attention
+from .layers import (
+    Param,
+    apply_mlp,
+    apply_norm,
+    embed_tokens,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    param,
+    unembed,
+    unzip,
+)
+from .mamba import MambaState, init_mamba, init_mamba_state, mamba_decode, mamba_forward
+from .transformer import block_forward, init_block, init_stack, layer_meta, run_stack
+
+
+def build_model(cfg, param_dtype=jnp.float32, remat: bool = True) -> "Model":
+    return Model(cfg, param_dtype, remat)
+
+
+class Model:
+    def __init__(self, cfg, param_dtype=jnp.float32, remat: bool = True):
+        self.cfg = cfg
+        self.dtype = param_dtype
+        self.remat = remat
+
+    # ================================================================ init
+    def init(self, key: jax.Array, max_seq: int = 4096):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 12)
+        p: Dict[str, Any] = {"embed": init_embedding(ks[0], cfg, dt)}
+        p["final_norm"] = init_norm(ks[1], cfg)
+
+        if cfg.family == "ssm":
+            p["layers"] = self._init_ssm_stack(ks[2])
+        elif cfg.family == "hybrid":
+            p.update(self._init_hybrid(ks[2]))
+        elif cfg.enc_dec:
+            p.update(self._init_encdec(ks[2], max_seq))
+        elif cfg.moe is not None and cfg.moe.n_dense_layers > 0:
+            p["dense_stack"] = init_stack(ks[2], cfg, cfg.moe.n_dense_layers, False, dtype=dt)
+            p["moe_stack"] = init_stack(
+                ks[3], cfg, cfg.n_layers - cfg.moe.n_dense_layers, True, dtype=dt
+            )
+        elif cfg.moe is not None:
+            p["stack"] = init_stack(ks[2], cfg, cfg.n_layers, True, dtype=dt)
+        else:
+            p["stack"] = init_stack(ks[2], cfg, cfg.n_layers, False, dtype=dt)
+
+        if cfg.mtp_depth:
+            p["mtp"] = {
+                "proj": param(ks[4], (2 * cfg.d_model, cfg.d_model), ("embed", "embed"), dt),
+                "block": init_block(ks[5], cfg, moe_layer=False, dtype=dt),
+                "norm_h": init_norm(ks[6], cfg),
+                "norm_e": init_norm(ks[7], cfg),
+            }
+        return p
+
+    def _init_ssm_stack(self, key):
+        from .layers import stack_params
+
+        cfg, dt = self.cfg, self.dtype
+        keys = jax.random.split(key, cfg.n_layers)
+        layers = []
+        for k in keys:
+            k1, k2 = jax.random.split(k)
+            layers.append({"ln": init_norm(k1, cfg), "mamba": init_mamba(k2, cfg, dt)})
+        return stack_params(layers)
+
+    def _init_hybrid(self, key):
+        """Zamba2: scan over (n_layers // every) superblocks of ``every``
+        Mamba layers + one shared-transformer application (parity-alternating
+        shared weights, dynamically indexed inside the scan body)."""
+        from .layers import stack_params
+
+        cfg, dt = self.cfg, self.dtype
+        h = cfg.hybrid
+        assert cfg.n_layers % h.every == 0, (cfg.n_layers, h.every)
+        n_groups = cfg.n_layers // h.every
+        ks = jax.random.split(key, cfg.n_layers + 2 * h.n_shared_blocks)
+        groups = []
+        for g in range(n_groups):
+            layers = []
+            for e in range(h.every):
+                k1, k2 = jax.random.split(ks[g * h.every + e])
+                layers.append({"ln": init_norm(k1, cfg), "mamba": init_mamba(k2, cfg, dt)})
+            groups.append(stack_params(layers))
+        shared = []
+        for b in range(h.n_shared_blocks):
+            kb = ks[cfg.n_layers + 2 * b]
+            kp = ks[cfg.n_layers + 2 * b + 1]
+            in_dim = 2 * cfg.d_model if h.concat_embedding else cfg.d_model
+            shared.append(
+                {
+                    "proj": param(kp, (in_dim, cfg.d_model), ("embed", "embed"), dt),
+                    "block": init_block(kb, cfg, moe_layer=False, dtype=dt),
+                }
+            )
+        return {"mamba_groups": stack_params(groups), "shared_blocks": stack_params(shared)}
+
+    def _init_encdec(self, key, max_seq: int):
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 6)
+        return {
+            "enc_pos": param(ks[0], (max_seq, cfg.d_model), (None, "embed"), dt, scale=0.02),
+            "dec_pos": param(ks[1], (max_seq, cfg.d_model), (None, "embed"), dt, scale=0.02),
+            "encoder": init_stack(ks[2], cfg, cfg.n_encoder_layers, dtype=dt),
+            "enc_norm": init_norm(ks[3], cfg),
+            "stack": init_stack(ks[4], cfg, cfg.n_layers, cross=True, dtype=dt),
+        }
+
+    # ============================================================= forward
+    def forward(self, params, batch: Dict[str, jax.Array], mode: str = "train"):
+        """Full-sequence forward. Returns (logits, aux, caches_or_None)."""
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return self._forward_encdec(params, batch, mode)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_tokens(params["embed"], tokens, cfg, self.dtype)
+        if cfg.family == "vlm" and "patches" in batch:
+            n_img = batch["patches"].shape[1]
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x[:, n_img:]], axis=1)
+        x = shard(x, ("batch", "seq", "embed"))
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x_emb = x
+
+        caches = None
+        if cfg.family == "ssm":
+            x, aux, caches = self._run_ssm(params, x, mode)
+        elif cfg.family == "hybrid":
+            x, aux, caches = self._run_hybrid(params, x, x_emb, positions, mode)
+        else:
+            x, aux, caches = self._run_lm_stacks(params, x, positions, mode)
+        x = apply_norm(params["final_norm"], x, cfg)
+        x = shard(x, ("batch", "seq", "embed"))
+        logits = unembed(params["embed"], x, cfg)
+        logits = shard(logits, ("batch", "seq", "vocab"))
+        if cfg.mtp_depth and mode == "train":
+            aux = (aux, self._mtp_hidden(params, x_emb, x, tokens))
+        return logits, aux, caches
+
+    def _run_lm_stacks(self, params, x, positions, mode, cache_index=None, caches=None):
+        cfg = self.cfg
+        aux_total = jnp.float32(0.0)
+        out_caches = {}
+        if "dense_stack" in params:
+            nd = cfg.moe.n_dense_layers
+            wd, td = layer_meta(cfg, nd)
+            x, c1, a1 = run_stack(
+                params["dense_stack"], x, cfg, positions, wd, td, mode,
+                caches["dense"] if caches else None, cache_index, remat=self.remat,
+            )
+            wm, tm = layer_meta(cfg, cfg.n_layers - nd)
+            x, c2, a2 = run_stack(
+                params["moe_stack"], x, cfg, positions, wm, tm, mode,
+                caches["moe"] if caches else None, cache_index, remat=self.remat,
+            )
+            aux_total = a1 + a2
+            out_caches = {"dense": c1, "moe": c2}
+        else:
+            w, t = layer_meta(cfg)
+            x, c, aux_total = run_stack(
+                params["stack"], x, cfg, positions, w, t, mode,
+                caches["stack"] if caches else None, cache_index, remat=self.remat,
+            )
+            out_caches = {"stack": c}
+        return x, aux_total, (out_caches if mode in ("prefill", "decode") else None)
+
+    def _run_ssm(self, params, x, mode, states=None):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            if mode == "decode":
+                p_l, st_l = xs
+                hn = apply_norm(p_l["ln"], h, cfg)
+                y, new_st = mamba_decode(p_l["mamba"], hn, cfg, st_l)
+            else:
+                p_l = xs
+                hn = apply_norm(p_l["ln"], h, cfg)
+                y, new_st = mamba_forward(p_l["mamba"], hn, cfg)
+            out = new_st if mode in ("decode", "prefill") else jnp.zeros((), jnp.float32)
+            return h + y, out
+
+        if self.remat and mode == "train":
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (params["layers"], states["layers"]) if mode == "decode" else params["layers"]
+        x, out_states = jax.lax.scan(body, x, xs)
+        caches = {"layers": out_states} if mode in ("prefill", "decode") else None
+        return x, jnp.float32(0.0), caches
+
+    def _run_hybrid(self, params, x, x_emb, positions, mode, cache_index=None, caches=None):
+        cfg = self.cfg
+        h = cfg.hybrid
+        n_groups = cfg.n_layers // h.every
+        shared = params["shared_blocks"]
+        parities = jnp.arange(n_groups, dtype=jnp.int32) % h.n_shared_blocks
+
+        def body(carry, xs):
+            hcur = carry
+            if mode == "decode":
+                pg, parity, (st_g, kv_g) = xs
+            else:
+                pg, parity = xs
+                st_g = kv_g = None
+            new_states = []
+            for e in range(h.every):
+                p_l = jax.tree.map(lambda a: a[e], pg)
+                hn = apply_norm(p_l["ln"], hcur, cfg)
+                if mode == "decode":
+                    st = jax.tree.map(lambda a: a[e], st_g)
+                    y, st2 = mamba_decode(p_l["mamba"], hn, cfg, st)
+                else:
+                    y, st2 = mamba_forward(p_l["mamba"], hn, cfg)
+                hcur = hcur + y
+                if mode in ("prefill", "decode"):
+                    new_states.append(st2)
+            # shared transformer block (parity-alternating weights)
+            sb = jax.tree.map(lambda a: a[parity], shared)
+            inp = jnp.concatenate([hcur, x_emb], axis=-1) if h.concat_embedding else hcur
+            hb = inp @ sb["proj"]
+            yb, kv_out, _ = block_forward(
+                sb["block"], hb, cfg, positions, mode=mode, cache=kv_g,
+                cache_index=cache_index,
+            )
+            hcur = hcur + (yb - hb)  # block returns hb+delta; add only the delta
+            if mode == "train":
+                return hcur, jnp.zeros((), jnp.float32)
+            st_stack = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+            return hcur, (st_stack, kv_out)
+
+        if self.remat and mode == "train":
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        xs = (params["mamba_groups"], parities)
+        if mode == "decode":
+            xs = xs + ((caches["mamba"], caches["shared_kv"]),)
+        x, ys = jax.lax.scan(body, x, xs)
+        caches_out = None
+        if mode in ("prefill", "decode"):
+            caches_out = {"mamba": ys[0], "shared_kv": ys[1]}
+        return x, jnp.float32(0.0), caches_out
+
+    def _forward_encdec(self, params, batch, mode):
+        cfg = self.cfg
+        frames = batch["frames"]  # (B, T, d) post-conv stub embeddings
+        tokens = batch["tokens"]  # (B, S_dec)
+        B, T, _ = frames.shape
+        S = tokens.shape[1]
+        memory = frames.astype(self.dtype) + params["enc_pos"][:T].astype(self.dtype)
+        memory = shard(memory, ("batch", "seq", "embed"))
+        enc_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        w, t = layer_meta(cfg, cfg.n_encoder_layers)
+        memory, _, _ = run_stack(
+            params["encoder"], memory, cfg, enc_pos, w, t, "train",
+            remat=self.remat, causal=False,  # encoder is bidirectional
+        )
+        memory = apply_norm(params["enc_norm"], memory, cfg)
+
+        x = embed_tokens(params["embed"], tokens, cfg, self.dtype)
+        x = x + params["dec_pos"][:S].astype(x.dtype)
+        dec_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        wd, td = layer_meta(cfg)
+        x, c, aux = run_stack(
+            params["stack"], x, cfg, dec_pos, wd, td, mode,
+            kv_memory=(memory, enc_pos), remat=self.remat,
+        )
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)
+        caches = None
+        if mode == "prefill":
+            caches = {"stack": c, "memory": memory, "enc_pos": enc_pos}
+        return logits, aux, caches
+
+    # ================================================================ loss
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch, mode="train")
+        tokens = batch["tokens"]
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        if cfg.family == "vlm" and "patches" in batch:
+            n_img = batch["patches"].shape[1]
+            mask = mask.at[:, : n_img - 1].set(0.0)  # no loss on image positions
+        ce = _xent(logits, labels, mask)
+        metrics = {"ce": ce}
+        total = ce
+        if cfg.moe is not None:
+            moe_aux = aux[0] if isinstance(aux, tuple) else aux
+            total = total + cfg.moe.router_aux_weight * moe_aux / max(cfg.n_layers, 1)
+            metrics["moe_aux"] = moe_aux
+        if cfg.mtp_depth and isinstance(aux, tuple):
+            mtp_ce = self._mtp_loss(params, aux[1], tokens)
+            total = total + 0.1 * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = total
+        return total, metrics
+
+    # ---------------------------------------------------------------- MTP
+    def _mtp_hidden(self, params, x_emb, h_final, tokens):
+        """DeepSeek-V3 MTP depth-1: combine h_t with emb(t+1) to predict t+2."""
+        cfg = self.cfg
+        m = params["mtp"]
+        e_next = jnp.concatenate([x_emb[:, 1:], x_emb[:, -1:]], axis=1)
+        hcat = jnp.concatenate(
+            [apply_norm(m["norm_h"], h_final, cfg), apply_norm(m["norm_e"], e_next, cfg)], -1
+        )
+        h = hcat @ m["proj"]
+        B, S, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, _, _ = block_forward(m["block"], h, cfg, positions, mode="train")
+        return h
+
+    def _mtp_loss(self, params, h_mtp, tokens):
+        cfg = self.cfg
+        logits = unembed(params["embed"], h_mtp, cfg)
+        labels = jnp.concatenate([tokens[:, 2:], tokens[:, -1:], tokens[:, -1:]], axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -2:].set(0.0)
+        return _xent(logits, labels, mask)
+
+    # ============================================================ serving
+    def prefill(self, params, batch):
+        """Forward + cache build. Returns (cache, last-position logits)."""
+        logits, _, caches = self.forward(params, batch, mode="prefill")
+        return caches, logits[:, -1]
+
+    def decode_step(self, params, tokens, cache, cache_index):
+        """tokens: (B, 1) int32 (LM) — one token for the whole batch."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg, self.dtype)
+        B = tokens.shape[0]
+        # cache_index: scalar (all slots at one age) or (B,) per-slot ages
+        idx_vec = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32).reshape(-1), (B,))
+        positions = idx_vec[:, None]
+        if cfg.enc_dec:
+            pidx = jnp.minimum(idx_vec, params["dec_pos"].shape[0] - 1)
+            x = x + jnp.take(params["dec_pos"], pidx, axis=0)[:, None, :].astype(x.dtype)
+            wd, td = layer_meta(cfg)
+            x, c, _ = run_stack(
+                params["stack"], x, cfg, positions, wd, td, "decode",
+                caches=cache["stack"], cache_index=cache_index,
+                kv_memory=(cache["memory"], cache["enc_pos"]), remat=False,
+            )
+            cache = {**cache, "stack": c}
+        elif cfg.family == "ssm":
+            x, _, c = self._run_ssm(params, x, "decode", states=cache)
+            cache = c
+        elif cfg.family == "hybrid":
+            x_emb = x
+            x, _, cache = self._run_hybrid(params, x, x_emb, positions, "decode", cache_index, cache)
+        else:
+            x, _, cache = self._run_lm_stacks(params, x, positions, "decode", cache_index, cache)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)
+        return logits[:, 0], cache
+
+    # ------------------------------------------------------------- caches
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16, memory_t: int = 1500):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            st = init_mamba_state(cfg, batch, dtype)
+            return {"layers": jax.tree.map(lambda a: jnp.stack([a] * cfg.n_layers), st)}
+        if cfg.family == "hybrid":
+            st = init_mamba_state(cfg, batch, dtype)
+            n_groups = cfg.n_layers // cfg.hybrid.every
+            every = cfg.hybrid.every
+            KH, hd = cfg.n_kv_heads, cfg.head_dim_
+            return {
+                # (groups, every, B, ...) matching the superblock scan
+                "mamba": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n_groups, every) + a.shape), st
+                ),
+                "shared_kv": (
+                    jnp.zeros((n_groups, batch, seq, KH, hd), dtype),
+                    jnp.zeros((n_groups, batch, seq, KH, hd), dtype),
+                ),
+            }
+        if cfg.enc_dec:
+            L, KH, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+            return {
+                "stack": (
+                    jnp.zeros((L, batch, seq, KH, hd), dtype),
+                    jnp.zeros((L, batch, seq, KH, hd), dtype),
+                ),
+                "memory": jnp.zeros((batch, memory_t, cfg.d_model), dtype),
+                "enc_pos": jnp.zeros((batch, memory_t), jnp.int32),
+            }
+        if cfg.mla is not None:
+            m = cfg.mla
+
+            def mla_cache(L):
+                return (
+                    jnp.zeros((L, batch, seq, m.kv_lora_rank), dtype),
+                    jnp.zeros((L, batch, seq, m.qk_rope_head_dim), dtype),
+                )
+
+            if cfg.moe is not None and cfg.moe.n_dense_layers:
+                nd = cfg.moe.n_dense_layers
+                return {"dense": mla_cache(nd), "moe": mla_cache(cfg.n_layers - nd)}
+            return {"stack": mla_cache(cfg.n_layers)}
+        L, KH, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+        kv = (
+            jnp.zeros((L, batch, seq, KH, hd), dtype),
+            jnp.zeros((L, batch, seq, KH, hd), dtype),
+        )
+        return {"stack": kv}
+
+
+    def cache_axes(self):
+        """Logical-axis names per cache leaf (same structure as init_cache)."""
+        cfg = self.cfg
+        kv_ax = ("layers", "cache_batch", "seq_kv", "kv_heads", "head_dim")
+        if cfg.family == "ssm":
+            return {
+                "layers": MambaState(
+                    conv=("layers", "cache_batch", None, "ssm_inner"),
+                    ssm=("layers", "cache_batch", "ssm_heads", None, None),
+                )
+            }
+        if cfg.family == "hybrid":
+            return {
+                "mamba": MambaState(
+                    conv=("layers", None, "cache_batch", None, "ssm_inner"),
+                    ssm=("layers", None, "cache_batch", "ssm_heads", None, None),
+                ),
+                "shared_kv": (kv_ax, kv_ax),
+            }
+        if cfg.enc_dec:
+            return {
+                "stack": (kv_ax, kv_ax),
+                "memory": ("cache_batch", "seq", "embed"),
+                "enc_pos": ("cache_batch", "seq"),
+            }
+        if cfg.mla is not None:
+            c_ax = ("layers", "cache_batch", "seq_kv", "kv_lora")
+            r_ax = ("layers", "cache_batch", "seq_kv", None)
+            if cfg.moe is not None and cfg.moe.n_dense_layers:
+                return {"dense": (c_ax, r_ax), "moe": (c_ax, r_ax)}
+            return {"stack": (c_ax, r_ax)}
+        return {"stack": (kv_ax, kv_ax)}
+
+
+def _xent(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,251 @@
+"""Mixture-of-Experts with sorted capacity dispatch (Mixtral / DeepSeek-V3).
+
+Dispatch is the sort-based formulation (no (T, E, C) one-hot einsum, which is
+infeasible at DeepSeek scale): flatten token->expert assignments, stable-sort
+by expert id, compute each token's slot within its expert group, drop beyond
+capacity, scatter into an (E, C, d) buffer, run the expert FFNs as one
+batched matmul, and scatter-add back weighted by the router gates.
+
+Sharding: the buffer is annotated ("experts", "expert_cap", "embed") so the
+expert dim maps to the model axis (expert parallelism) and capacity to the
+data axis — the scatter/gather becomes the dispatch all-to-all under SPMD.
+DeepSeek-V3 sigmoid routing + shared expert and the Switch-style auxiliary
+load-balancing loss are included.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from ..sharding.ctx import get_ctx
+from .layers import Param, act_fn, init_mlp, param
+
+try:  # jax>=0.8 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": param(ks[0], (d, m.n_experts), ("embed", "experts"), jnp.float32),
+        "wi_gate": param(ks[1], (m.n_experts, d, m.expert_dff), ("experts", "embed", "mlp"), dtype),
+        "wi_up": param(ks[2], (m.n_experts, d, m.expert_dff), ("experts", "embed", "mlp"), dtype),
+        "wo": param(ks[3], (m.n_experts, m.expert_dff, d), ("experts", "mlp", "embed"), dtype),
+    }
+    if m.router == "sigmoid":
+        p["router_bias"] = param(ks[4], (m.n_experts,), ("experts",), jnp.float32, init="zeros")
+    if m.n_shared:
+        import dataclasses as _dc
+
+        shared_cfg = _dc.replace(cfg, gated_mlp=True, use_bias=False)
+        p["shared"] = init_mlp(ks[5], shared_cfg, d_ff=m.expert_dff * m.n_shared, dtype=dtype)
+    return p
+
+
+def route(p, x_flat: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gates (T,k), expert_idx (T,k), aux_loss scalar)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), p["router"])
+    if m.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"]  # aux-loss-free balancing bias (DSv3)
+        gates, idx = jax.lax.top_k(sel, m.top_k)
+        gates = jnp.take_along_axis(scores, idx, axis=-1)  # weights use raw scores
+        gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, m.top_k)
+        gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    T = x_flat.shape[0]
+    f = jnp.zeros((m.n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * m.top_k)
+    P = probs.mean(0)
+    aux = m.n_experts * jnp.sum(f * P)
+    return gates.astype(x_flat.dtype), idx, aux
+
+
+def _dispatch_ffn(x_flat, gates, idx, wg, wu, wo, e0, E_loc, C, act, dtype):
+    """Sort-based capacity dispatch restricted to experts [e0, e0+E_loc).
+
+    Returns the combined (T, d) contribution of those experts (zeros for
+    tokens routed elsewhere).  Pure function of local data — the shard_map
+    bodies below call it with per-shard expert slices.
+    """
+    T, d = x_flat.shape
+    k = idx.shape[-1]
+    eid_rel = idx.reshape(-1) - e0
+    in_range = (eid_rel >= 0) & (eid_rel < E_loc)
+    sort_key = jnp.where(in_range, eid_rel, E_loc)  # out-of-range sorts last
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(sort_key, stable=True)
+    key_s, tok_s = sort_key[order], tok[order]
+    counts = jnp.bincount(key_s, length=E_loc + 1)[:E_loc]
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    safe_key = jnp.minimum(key_s, E_loc - 1)
+    slot = jnp.arange(T * k, dtype=jnp.int32) - starts[safe_key].astype(jnp.int32)
+    keep = (key_s < E_loc) & (slot < C)
+    dest = safe_key * C + jnp.clip(slot, 0, C - 1)
+
+    buf = jnp.zeros((E_loc * C, d), dtype)
+    buf = buf.at[dest].add(jnp.where(keep[:, None], x_flat[tok_s], 0))
+    h = buf.reshape(E_loc, C, d)
+    up = jnp.einsum("ecd,edf->ecf", h, wu)
+    gate = jnp.einsum("ecd,edf->ecf", h, wg)
+    out = jnp.einsum("ecf,efd->ecd", act(gate) * up, wo).reshape(E_loc * C, d)
+
+    gates_s = gates.reshape(-1)[order]
+    contrib = out[dest] * jnp.where(keep, gates_s, 0.0)[:, None]
+    return jnp.zeros((T, d), dtype).at[tok_s].add(contrib)
+
+
+def _capacity(cf: float, T: int, k: int, E: int) -> int:
+    C = int(cf * T * k / E)
+    return max(8, -(-C // 8) * 8)
+
+
+def apply_moe(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).  Dispatches to the shard_map EP path
+    when a sharding context with a plan is active (see apply_moe_sharded)."""
+    ctx = get_ctx()
+    if ctx is not None and ctx[2].get("moe_mode") in ("capacity", "resident"):
+        return apply_moe_sharded(p, x, cfg, ctx)
+
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    x_flat = x.reshape(T, d)
+    gates, idx, aux = route(p, x_flat, cfg)
+    C = _capacity(m.capacity_factor, T, m.top_k, m.n_experts)
+    y = _dispatch_ffn(
+        x_flat, gates, idx, p["wi_gate"], p["wi_up"], p["wo"],
+        0, m.n_experts, C, act_fn(cfg.act), x.dtype,
+    )
+    if "shared" in p:
+        from .layers import apply_mlp
+
+        y = y + apply_mlp(p["shared"], x_flat, cfg)
+    return y.reshape(B, S, d), aux
+
+
+def apply_moe_sharded(p, x: jax.Array, cfg, ctx) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via shard_map (the §Perf hillclimb path).
+
+    mode="capacity" (train/prefill): tokens stay batch-sharded over the data
+      axes (they are replicated over "model" already), each model shard
+      locally dispatches to its E/n_model experts and computes; the combine
+      is ONE psum of (T_local, d) activations over "model" per layer —
+      replacing the XLA scatter/all-reduce of the full (E*C, d) buffer
+      (158 TB -> ~GBs for deepseek train; EXPERIMENTS.md §Perf).
+    mode="resident" (decode): experts are fully resident, sharded over
+      (model x data) with no per-step weight gathers; the (tiny) token batch
+      is all-gathered over data instead — weights don't move, tokens do.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh, rules, extras = ctx
+    mode = extras["moe_mode"]
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    act = act_fn(cfg.act)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_data = math.prod(mesh.shape[a] for a in dp)
+    n_model = mesh.shape.get("model", 1)
+    E = m.n_experts
+
+    x_flat = x.reshape(T, d)
+    gates, idx, aux = route(p, x_flat, cfg)
+    wg, wu, wo = p["wi_gate"], p["wi_up"], p["wo"]
+
+    # resident EP: experts owned 1-per-cell over ("model",)+dp_own; any data
+    # axes NOT in dp_own (e.g. "pod" on the multi-pod mesh) replicate the
+    # expert weights and stay pure data-parallel — pods never exchange MoE
+    # traffic at decode.
+    dp_own: tuple = ()
+    for k_ax in range(len(dp), -1, -1):
+        cand = dp[len(dp) - k_ax:]
+        nd = math.prod(mesh.shape[a] for a in cand) if cand else 1
+        if E % (n_model * nd) == 0:
+            dp_own = cand
+            break
+    n_own = math.prod(mesh.shape[a] for a in dp_own) if dp_own else 1
+
+    if mode == "resident" and E % (n_model * n_own) == 0 and n_model * n_own > 1:
+        E_loc = E // (n_model * n_own)
+        C = _capacity(m.capacity_factor, T // max(n_data // n_own, 1), m.top_k, E)
+        w_spec = P(("model",) + dp_own, None, None)
+
+        def body(xf, g, i, wg_, wu_, wo_):
+            if dp_own:
+                d_idx = jax.lax.axis_index(dp_own[0])
+                for ax in dp_own[1:]:
+                    d_idx = d_idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+            else:
+                d_idx = 0
+            e0 = (jax.lax.axis_index("model") * n_own + d_idx) * E_loc
+            # weights stay put; the (small) token batch moves within dp_own
+            xg = jax.lax.all_gather(xf, dp_own, axis=0, tiled=True) if dp_own else xf
+            gg = jax.lax.all_gather(g, dp_own, axis=0, tiled=True) if dp_own else g
+            ig = jax.lax.all_gather(i, dp_own, axis=0, tiled=True) if dp_own else i
+            contrib = _dispatch_ffn(xg, gg, ig, wg_, wu_, wo_, e0, E_loc, C, act, xf.dtype)
+            # combine: joint psum then keep own token slice.  (§Perf
+            # iteration 3 tried psum(model) + psum_scatter(data) — measured
+            # 8% WORSE under the ring-traffic model; refuted and reverted.)
+            out = jax.lax.psum(contrib, ("model",) + dp_own)
+            T_loc = xf.shape[0]
+            return jax.lax.dynamic_slice_in_dim(out, d_idx * T_loc, T_loc, 0)
+
+    elif E % n_model == 0:  # capacity mode: experts split over "model"
+        E_loc = E // n_model
+        C = _capacity(m.capacity_factor, T // max(n_data, 1), m.top_k, E)
+        w_spec = (P("model", None, None),) * 3
+
+        def body(xf, g, i, wg_, wu_, wo_):
+            e0 = jax.lax.axis_index("model") * E_loc
+            contrib = _dispatch_ffn(xf, g, i, wg_, wu_, wo_, e0, E_loc, C, act, xf.dtype)
+            # NOTE §Perf iteration 2 (refuted): an explicit bf16 cast here is
+            # a no-op — with bf16 params the combine is already bf16 on the
+            # wire; the f32 volumes in the dry-run HLO are an XLA:CPU
+            # upcast artifact, not real TPU traffic.
+            return jax.lax.psum(contrib, "model")
+
+    else:  # few-expert archs (mixtral E=8 < 16): TP-within-expert — every
+        # rank holds ALL experts on a 1/n_model slice of the FFN dim; the
+        # down-proj partials combine in the same single psum per layer.
+        C = _capacity(m.capacity_factor, T // max(n_data, 1), m.top_k, E)
+        w_spec = (
+            P(None, None, "model"),  # wi_gate (E, d, f/16)
+            P(None, None, "model"),  # wi_up
+            P(None, "model", None),  # wo (E, f/16, d)
+        )
+
+        def body(xf, g, i, wg_, wu_, wo_):
+            contrib = _dispatch_ffn(xf, g, i, wg_, wu_, wo_, 0, E, C, act, xf.dtype)
+            return jax.lax.psum(contrib, "model")
+
+    t_spec = P(dp if dp else None, None)
+    if not isinstance(w_spec, tuple):
+        w_spec = (w_spec,) * 3
+    y = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(t_spec, t_spec, t_spec) + w_spec,
+        out_specs=t_spec,
+        check_vma=False,
+    )(x_flat, gates, idx, wg, wu, wo)
+
+    if "shared" in p:
+        from .layers import apply_mlp
+
+        y = y + apply_mlp(p["shared"], x_flat, cfg)
+    return y.reshape(B, S, d), aux

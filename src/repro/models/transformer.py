@@ -1,0 +1,170 @@
+"""Transformer blocks + layer stacks for every assigned family.
+
+Homogeneous stacks (dense / MoE / SSM) are scanned with ``jax.lax.scan`` over
+stacked parameters — one compiled layer body regardless of depth, which keeps
+HLO small for the 512-device dry-run and enables per-layer remat.
+Heterogeneity is expressed through *traced per-layer metadata* (gemma3's 5:1
+local:global pattern rides through scan as per-layer window/theta arrays).
+Structurally different stacks (DeepSeek's 3 dense + 58 MoE layers; whisper's
+encoder/decoder; zamba2's shared attention blocks) are composed from several
+scans / an unrolled loop with genuinely shared weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .attention import (
+    GLOBAL_WINDOW,
+    attn_decode,
+    attn_forward,
+    init_attention,
+    init_mla,
+    mla_decode,
+    mla_forward,
+)
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    init_mlp,
+    init_norm,
+    param,
+    stack_params,
+)
+from .mamba import init_mamba, init_mamba_state, mamba_decode, mamba_forward
+from .moe import apply_moe, init_moe
+
+
+# ----------------------------------------------------------- layer metadata
+def layer_meta(cfg, n_layers: Optional[int] = None):
+    """(window[i], theta[i]) arrays driving SWA / gemma3 local:global."""
+    L = n_layers or cfg.n_layers
+    windows, thetas = [], []
+    for i in range(L):
+        is_global = cfg.global_every is not None and (i + 1) % cfg.global_every == 0
+        if cfg.sliding_window is not None and not is_global:
+            windows.append(cfg.sliding_window)
+            thetas.append(cfg.rope_theta)
+        else:
+            windows.append(int(GLOBAL_WINDOW))
+            thetas.append(cfg.rope_theta_global or cfg.rope_theta)
+    return jnp.array(windows, jnp.int32), jnp.array(thetas, jnp.float32)
+
+
+# ------------------------------------------------------------------- block
+def init_block(key, cfg, moe_layer: bool = False, cross: bool = False, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": init_norm(ks[0], cfg)}
+    p["attn"] = init_mla(ks[1], cfg, dtype) if cfg.mla else init_attention(ks[1], cfg, dtype)
+    if cross:
+        p["ln_cross"] = init_norm(ks[2], cfg)
+        p["cross"] = init_attention(ks[3], cfg, dtype)
+    if not cfg.parallel_block:
+        p["ln2"] = init_norm(ks[4], cfg)
+    if moe_layer:
+        p["moe"] = init_moe(ks[5], cfg, dtype)
+    else:
+        d_ff = cfg.moe.dense_dff if (cfg.moe and cfg.moe.n_dense_layers) else cfg.d_ff
+        p["mlp"] = init_mlp(ks[5], cfg, d_ff=d_ff, dtype=dtype)
+    return p
+
+
+def block_forward(
+    p: Dict,
+    x: jax.Array,
+    cfg,
+    positions: jax.Array,
+    window=None,
+    theta=None,
+    mode: str = "train",
+    cache=None,
+    cache_index=None,
+    kv_memory=None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x', cache_entry, aux_loss). cache_entry is the new KV for
+    prefill/decode modes, None-shaped zeros otherwise."""
+    ds = jnp.asarray(cfg.depth_scale, x.dtype)
+    h = apply_norm(p["ln1"], x, cfg)
+    h = shard(h, ("batch", "seq", "embed"))
+    if cfg.mla:
+        if mode == "decode":
+            a, new_cache = mla_decode(p["attn"], h, cache, cfg, cache_index)
+        else:
+            a, new_cache = mla_forward(p["attn"], h, cfg, positions)
+    else:
+        if mode == "decode":
+            a, new_cache = attn_decode(p["attn"], h, cache, cfg, cache_index, window, theta)
+        else:
+            a, new_cache = attn_forward(p["attn"], h, cfg, positions, window, theta, causal=causal)
+    aux = jnp.float32(0.0)
+    if cfg.parallel_block:
+        # Cohere: y = x + attn(n(x)) + mlp(n(x)) (single pre-norm)
+        m = apply_mlp(p["mlp"], h, cfg)
+        y = x + (a + m) * ds
+        return y, new_cache, aux
+    x = x + a * ds
+    if "cross" in p:
+        hc = apply_norm(p["ln_cross"], x, cfg)
+        c, _ = attn_forward(p["cross"], hc, cfg, positions, kv_memory=kv_memory)
+        x = x + c * ds
+    h2 = apply_norm(p["ln2"], x, cfg)
+    h2 = shard(h2, ("batch", "seq", "embed"))
+    if "moe" in p:
+        m, aux = apply_moe(p["moe"], h2, cfg)
+    else:
+        m = apply_mlp(p["mlp"], h2, cfg)
+    return x + m * ds, new_cache, aux
+
+
+# ----------------------------------------------------------- scanned stack
+def init_stack(key, cfg, n_layers: int, moe_layer: bool = False, cross: bool = False, dtype=jnp.float32):
+    keys = jax.random.split(key, n_layers)
+    return stack_params([init_block(k, cfg, moe_layer, cross, dtype) for k in keys])
+
+
+def run_stack(
+    stack: Dict,
+    x: jax.Array,
+    cfg,
+    positions: jax.Array,
+    windows: jax.Array,
+    thetas: jax.Array,
+    mode: str = "train",
+    caches=None,
+    cache_index=None,
+    kv_memory=None,
+    remat: bool = True,
+    causal: bool = True,
+):
+    """Scan a homogeneous stack. caches: pytree stacked on leading layer dim."""
+
+    def body(carry, xs):
+        h, aux = carry
+        if mode == "decode":
+            p_l, w_l, t_l, c_l = xs
+        else:
+            p_l, w_l, t_l = xs
+            c_l = None
+        y, new_c, a = block_forward(
+            p_l, h, cfg, positions, w_l, t_l, mode=mode, cache=c_l,
+            cache_index=cache_index, kv_memory=kv_memory, causal=causal,
+        )
+        if mode == "train":
+            return (y, aux + a), jnp.zeros((), jnp.float32)
+        return (y, aux + a), new_c  # prefill: created KV; decode: updated KV
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (stack, windows, thetas)
+    if mode == "decode":
+        xs = xs + (caches,)
+    (x, aux), out_caches = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    return x, (out_caches if mode in ("decode", "prefill") else None), aux

@@ -1,0 +1,111 @@
+"""Continuous batching: iteration-level scheduling of concurrent requests.
+
+Requests join/leave the running batch between decode steps (vLLM-style)
+instead of static request batches: a request that finishes frees its cache
+slot for the next queued request at the next iteration.  Combined with Hiku
+this is the worker-side execution model — the scheduler places requests on
+workers, the batcher packs them into the worker's decode loop.
+
+Every iteration issues ONE batched ``decode_step`` over all slots with a
+per-slot ``cache_index`` vector (the model's decode path scatters each row
+at its own age and masks per-row validity).  Prompt prefill rides the same
+loop: a slot in prefill phase consumes its next prompt token instead of its
+last generated one — fixed shapes, jit-friendly, no recompilation as the
+mix of prefill/decode requests changes.  Free slots decode a dummy token
+that lands at position 0 and is overwritten on reuse (masked by slot length
+— the standard static-shape trade-off on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kv_cache import CacheManager
+
+
+@dataclasses.dataclass
+class GenRequest:
+    request_id: str
+    prompt: List[int]
+    max_new_tokens: int = 8
+    generated: List[int] = dataclasses.field(default_factory=list)
+    _consumed: int = 0  # prompt tokens fed so far
+
+    @property
+    def in_prefill(self) -> bool:
+        return self._consumed < len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ContinuousBatcher:
+    def __init__(self, model, params, n_slots: int = 4, max_len: int = 64,
+                 dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.mgr = CacheManager(model, n_slots, max_len, dtype=dtype)
+        self.queue: Deque[GenRequest] = deque()
+        self.running: Dict[str, GenRequest] = {}
+        self.completed: Dict[str, GenRequest] = {}
+        self._decode = jax.jit(model.decode_step)
+        self.steps = 0
+
+    def submit(self, req: GenRequest) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and self.mgr.allocate(self.queue[0].request_id):
+            req = self.queue.popleft()
+            self.running[req.request_id] = req
+
+    def step(self) -> int:
+        """One continuous-batching iteration; returns #running requests."""
+        self._admit()
+        if not self.running:
+            return 0
+        B = self.mgr.n_slots
+        toks = np.zeros((B, 1), np.int32)
+        lengths = np.zeros(B, np.int32)
+        for rid, req in self.running.items():
+            slot = self.mgr.slots[rid]
+            if req.in_prefill:
+                toks[slot.idx, 0] = req.prompt[req._consumed]
+            else:
+                toks[slot.idx, 0] = (req.generated[-1] if req.generated
+                                     else (req.prompt[-1] if req.prompt else 1))
+            lengths[slot.idx] = slot.length
+        logits, self.mgr.cache = self._decode(
+            self.params, jnp.asarray(toks), self.mgr.cache, jnp.asarray(lengths)
+        )
+        best = np.asarray(jnp.argmax(logits, axis=-1))
+        for rid, req in list(self.running.items()):
+            slot = self.mgr.slots[rid]
+            slot.length = min(slot.length + 1, self.mgr.max_len - 1)
+            if req.in_prefill:
+                req._consumed += 1
+                if not req.in_prefill:
+                    # the logits after the final prompt token ARE the first
+                    # generation — capture them, don't re-feed the prompt end
+                    req.generated.append(int(best[slot.idx]))
+            else:
+                req.generated.append(int(best[slot.idx]))
+            if req.done:
+                del self.running[rid]
+                self.mgr.release(rid)
+                self.completed[rid] = req
+        self.steps += 1
+        return len(self.running)
+
+    def run_to_completion(self, max_steps: int = 1000) -> Dict[str, List[int]]:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return {rid: req.generated for rid, req in self.completed.items()}

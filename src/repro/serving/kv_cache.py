@@ -1,0 +1,70 @@
+"""KV-cache slot management for batched serving.
+
+A ``CacheManager`` owns one model-level cache pytree of shape
+(B_slots, ...) and hands out *slots* to requests: allocation finds a free
+slot, release returns it.  Per-slot valid lengths drive the decode masks, so
+requests of different ages can share one batched ``decode_step`` call — the
+substrate for continuous batching (batching.py).
+
+Layout note: caches produced by ``Model.init_cache`` carry the batch dim at
+position 1 (after "layers"/"groups") for stacked entries and position 0 for
+whisper memory — ``_batch_axis`` resolves this per leaf by matching the slot
+count, which keeps the manager model-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Slot:
+    idx: int
+    request_id: str
+    length: int = 0  # tokens currently in the cache
+
+
+class CacheManager:
+    def __init__(self, model, n_slots: int, max_len: int, dtype=jnp.bfloat16):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(n_slots, max_len, dtype=dtype)
+        self._free: List[int] = list(range(n_slots))
+        self.slots: Dict[str, Slot] = {}
+
+    # ------------------------------------------------------------- slots
+    def allocate(self, request_id: str) -> Optional[Slot]:
+        if not self._free:
+            return None
+        slot = Slot(self._free.pop(0), request_id)
+        self.slots[request_id] = slot
+        return slot
+
+    def release(self, request_id: str) -> None:
+        slot = self.slots.pop(request_id, None)
+        if slot is not None:
+            self._free.append(slot.idx)
+
+    @property
+    def active(self) -> List[Slot]:
+        return sorted(self.slots.values(), key=lambda s: s.idx)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self._free) / self.n_slots
+
+    # ------------------------------------------------------------ lengths
+    def lengths(self) -> np.ndarray:
+        out = np.zeros(self.n_slots, np.int32)
+        for s in self.slots.values():
+            out[s.idx] = s.length
+        return out
+
+    def bytes(self) -> int:
+        return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(self.cache))

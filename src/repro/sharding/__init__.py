@@ -1,0 +1,11 @@
+from .ctx import activation_rules, shard, use_rules
+from .rules import ShardingPlan, logical_to_mesh, param_shardings
+
+__all__ = [
+    "ShardingPlan",
+    "activation_rules",
+    "logical_to_mesh",
+    "param_shardings",
+    "shard",
+    "use_rules",
+]

@@ -1,0 +1,75 @@
+"""Activation-sharding context.
+
+Model code annotates activations with *logical* axis names:
+
+    x = shard(x, ("batch", "seq", "embed"))
+
+Outside any context this is the identity (CPU smoke tests).  Inside
+``use_rules(mesh, rules)`` it becomes ``jax.lax.with_sharding_constraint``
+with the logical names resolved to mesh axes — the single hook through which
+the launcher switches sharding plans without touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_STATE = threading.local()
+
+
+def _resolve(names: Sequence[Optional[str]], rules: Dict[str, tuple], mesh, shape) -> PartitionSpec:
+    used = set()
+    spec = []
+    for dim, name in enumerate(names):
+        axes = rules.get(name, ()) if name else ()
+        picked = []
+        size = 1
+        for ax in axes:
+            if ax in used or ax not in mesh.shape:
+                continue
+            size *= mesh.shape[ax]
+            picked.append(ax)
+        # divisibility guard: drop the whole assignment if the dim can't split
+        if picked and (shape[dim] % size == 0) and shape[dim] > 0:
+            used.update(picked)
+            spec.append(tuple(picked) if len(picked) > 1 else picked[0])
+        else:
+            spec.append(None)
+    return PartitionSpec(*spec)
+
+
+def shard(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    ctx = getattr(_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules, _ = ctx
+    if x.ndim != len(names):
+        return x
+    spec = _resolve(names, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def get_ctx():
+    """(mesh, rules, extras) of the active sharding context, or None."""
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh, rules: Dict[str, tuple], **extras):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules, extras)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def activation_rules(plan) -> Dict[str, tuple]:
+    """Logical-activation-axis -> mesh-axes mapping for a ShardingPlan."""
+    r = dict(plan.activation_rules)
+    return r

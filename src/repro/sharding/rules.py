@@ -1,0 +1,174 @@
+"""Sharding plans: logical axis names -> mesh axes, with divisibility guards.
+
+A ``ShardingPlan`` is two rule tables (params, activations).  Resolution is
+shape-aware: a rule only applies if the dim divides by the mesh-axes product
+and no mesh axis is used twice in one spec — this single guard is what lets
+every (arch x shape) cell compile on the same mesh (GQA archs with
+kv_heads=4 or 8 simply drop the model axis on that dim and pick it up on the
+context-parallel seq dim instead).
+
+Baseline plans (hillclimbed variants are recorded in EXPERIMENTS.md §Perf):
+* TP        — params tensor-parallel over "model"; activations batch-sharded
+              over ("pod", "data").
+* TP+FSDP   — additionally shard the d_model ("embed") dim of weights over
+              ("pod", "data") (ZeRO-3 style; XLA all-gathers per layer).
+              Auto-enabled when the TP-sharded replica would not fit HBM.
+* EP        — MoE experts over "model" (DeepSeek: 16 experts/device),
+              dispatch capacity over "data".
+* Context-parallel decode — KV caches shard their *sequence* dim over
+              "model"; softmax reductions become the flash-decode combine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os as _os
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .ctx import _resolve
+
+HBM_BYTES = 16 * 2**30  # TPU v5e
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    name: str
+    param_rules: Dict[str, Tuple[str, ...]]
+    activation_rules: Dict[str, Tuple[str, ...]]
+    # MoE distribution: None -> in-graph scatter dispatch (paper-faithful XLA
+    # baseline); "capacity" -> shard_map EP w/ psum combine (train/prefill);
+    # "resident" -> fully-resident 2D EP, tokens move not weights (decode).
+    moe_mode: Optional[str] = None
+
+
+def _base_param_rules(fsdp: bool) -> Dict[str, Tuple[str, ...]]:
+    fs = ("pod", "data") if fsdp else ()
+    return {
+        "embed": fs,
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": (),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "q_lora": (),
+        "kv_lora": fs,
+        "ssm_inner": ("model",),
+        "ssm_heads": ("model",),
+        "ssm_state": (),
+        "layers": (),
+    }
+
+
+def _base_activation_rules() -> Dict[str, Tuple[str, ...]]:
+    return {
+        "batch": ("pod", "data"),
+        "cache_batch": ("pod", "data"),  # KV-cache batch dim (always sharded)
+        "seq": (),
+        "embed": (),
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "experts": ("model",),
+        "expert_cap": ("pod", "data"),
+        "seq_kv": ("model",),  # context-parallel KV cache
+        "ssm_heads": ("model",),
+    }
+
+
+def make_plan(
+    name: str = "tp",
+    fsdp: bool = False,
+    seq_shard: bool = False,
+    moe_mode: Optional[str] = None,
+    weight_stationary: bool = False,
+    sp_embed: bool = False,
+    overrides: Optional[Dict[str, Dict[str, Tuple[str, ...]]]] = None,
+) -> ShardingPlan:
+    pr = _base_param_rules(fsdp)
+    ar = _base_activation_rules()
+    if seq_shard:  # sequence parallelism for B=1 long-context
+        ar["seq"] = ("pod", "data")
+    if sp_embed:
+        # SP-style boundaries: block inputs/outputs sharded on d_model over
+        # "model" — XLA converts the TP all-reduces into reduce-scatter +
+        # all-gather pairs (half the boundary wire volume).
+        ar["embed"] = ("model",)
+    if moe_mode == "resident":
+        # 2D EP residency: experts over (model x data), replicated over pods
+        # (pods stay independent DP replicas for decode; moe.py matches this
+        # ownership in its shard_map body)
+        pr["experts"] = ("model", "data")
+        sp_embed = False
+    if weight_stationary:
+        # decode on FSDP-sized models: weights stay 2D-sharded; the tiny
+        # activations move instead.  Dropping the batch constraint alone is
+        # not enough (SPMD still gathers weights) — the d_model dim of the
+        # boundary activations is explicitly sharded over the FSDP axes so
+        # every dot contracts over a sharded dim: partial sums + a tiny
+        # output all-reduce replace the per-layer weight all-gather.
+        ar["batch"] = ()
+        ar["embed"] = ("pod", "data")
+    if overrides:
+        pr.update(overrides.get("params", {}))
+        ar.update(overrides.get("activations", {}))
+    return ShardingPlan(name, pr, ar, moe_mode=moe_mode)
+
+
+def auto_plan(
+    cfg, step_kind: str, n_model: int = 16, batch: int = 0,
+    level: str = "baseline",
+) -> ShardingPlan:
+    """Pick the plan for (arch, step) from HBM arithmetic.
+
+    level="baseline" is the paper-faithful pjit/XLA path (recorded first in
+    §Perf); level="opt" enables the beyond-baseline hillclimb levers
+    (shard_map EP MoE, resident experts, weight-stationary decode).
+    """
+    p_bytes = cfg.n_params() * 2  # bf16
+    state_mult = 3.0 if step_kind == "train" else 1.0  # + m,v (see optimizer)
+    tp_resident = p_bytes * state_mult / max(n_model, 1)
+    fsdp = tp_resident > 0.5 * HBM_BYTES
+    seq_shard = step_kind == "decode" and batch == 1
+    moe_mode = None
+    ws = False
+    if level == "opt":
+        if cfg.moe is not None:
+            if step_kind == "decode":
+                # resident EP needs >=1 expert per mesh cell; for few-expert
+                # archs (mixtral E=8) the in-graph dispatch is already cheap
+                # at decode token counts and weight movement would dominate
+                # (measured: 0.27 -> 0.64 s — see §Perf generalization table)
+                moe_mode = "resident" if cfg.moe.n_experts >= n_model * n_model else None
+            else:
+                moe_mode = "capacity"
+        if fsdp and step_kind == "decode":
+            ws = True  # weight-stationary decode (also for MoE: MLA/dense parts)
+    nm = f"{'fsdp+' if fsdp else ''}tp" + ("+seqshard" if seq_shard else "")
+    if moe_mode:
+        nm += f"+ep-{moe_mode}"
+    if ws:
+        nm += "+ws"
+    sp = level == "opt" and step_kind == "train" and _os.environ.get("REPRO_SP_EMBED") == "1"
+    if sp:
+        nm += "+sp"
+    return make_plan(nm, fsdp=fsdp, seq_shard=seq_shard, moe_mode=moe_mode,
+                     weight_stationary=ws, sp_embed=sp)
+
+
+# ---------------------------------------------------------------- resolvers
+def logical_to_mesh(mesh, plan_rules: Dict, names: Sequence[Optional[str]], shape) -> NamedSharding:
+    return NamedSharding(mesh, _resolve(names, plan_rules, mesh, shape))
+
+
+def param_shardings(mesh, plan: ShardingPlan, axes_tree, shape_tree):
+    """Tree of NamedShardings for a param tree (axes names + shapes)."""
+
+    def one(names, arr):
+        shape = arr.shape if hasattr(arr, "shape") else tuple(arr)
+        return logical_to_mesh(mesh, plan.param_rules, names, shape)
+
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x))

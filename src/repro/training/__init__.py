@@ -1,0 +1,13 @@
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state, schedule_lr
+from .train_step import make_eval_step, make_serve_steps, make_train_step
+
+__all__ = [
+    "OptConfig",
+    "OptState",
+    "adamw_update",
+    "init_opt_state",
+    "make_eval_step",
+    "make_serve_steps",
+    "make_train_step",
+    "schedule_lr",
+]

@@ -1,0 +1,151 @@
+"""Checkpoint/restart: atomic, integrity-checked, async, reshard-on-restore.
+
+Layout per step:  <dir>/step_0000042/
+    manifest.json   — step, tree structure, per-leaf sha256, wall time
+    arrays.npz      — flattened leaves keyed by tree path
+
+Fault-tolerance properties:
+* atomic publish: written to ``.tmp-…`` then os.rename (a crashed writer never
+  corrupts the latest checkpoint);
+* integrity: sha256 per leaf, verified on restore (detects torn/bit-rotten
+  files before they poison a 1000-node run);
+* async: ``save_async`` snapshots to host memory synchronously (cheap) and
+  writes in a background thread — train steps are not blocked by the
+  filesystem;
+* elastic restore: ``restore`` takes target NamedShardings and device_puts
+  each leaf, so a checkpoint written on one mesh resumes on another
+  (training/elastic.py wires this to plan changes).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize ml_dtypes extension types; store them as raw views.
+_EXT_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_storable(a: np.ndarray) -> np.ndarray:
+    for name, (ext, raw) in _EXT_DTYPES.items():
+        if a.dtype == ext:
+            return a.view(raw)
+    return a
+
+
+def _from_storable(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        return a.view(_EXT_DTYPES[dtype_name][0])
+    return a
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _sha(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()[:16]
+
+
+def save(ckpt_dir: str | os.PathLike, step: int, tree, keep: int = 3) -> Path:
+    """Synchronous atomic checkpoint write; returns the published path."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp-step_{step:08d}-{os.getpid()}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    np.savez(tmp / "arrays.npz", **{k: _to_storable(v) for k, v in flat.items()})
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "leaves": {k: {"sha": _sha(_to_storable(v)), "shape": list(v.shape),
+                       "dtype": str(v.dtype)} for k, v in flat.items()},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+_PENDING: Dict[str, threading.Thread] = {}
+
+
+def save_async(ckpt_dir: str | os.PathLike, step: int, tree, keep: int = 3) -> threading.Thread:
+    """Snapshot to host now, write in background; returns the writer thread."""
+    host_tree = jax.tree.map(lambda a: np.asarray(a), tree)  # sync snapshot
+    t = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, keep), daemon=True)
+    t.start()
+    _PENDING[str(ckpt_dir)] = t
+    return t
+
+
+def wait_pending(ckpt_dir: str | os.PathLike) -> None:
+    t = _PENDING.pop(str(ckpt_dir), None)
+    if t is not None:
+        t.join()
+
+
+def latest_step(ckpt_dir: str | os.PathLike) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | os.PathLike, like, step: Optional[int] = None,
+            shardings=None, verify: bool = True):
+    """Restore into the structure of ``like``; device_put per-leaf shardings."""
+    d = Path(ckpt_dir)
+    step = latest_step(d) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {d}")
+    path = d / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    arrays = np.load(path / "arrays.npz")
+    if verify:
+        for k, meta in manifest["leaves"].items():
+            got = _sha(arrays[k])
+            if got != meta["sha"]:
+                raise IOError(f"checkpoint corruption at leaf {k}: {got} != {meta['sha']}")
+
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    sh_flat = None
+    if shardings is not None:
+        sh_flat = treedef.flatten_up_to(shardings)
+    out = []
+    for i, (pth, leaf) in enumerate(leaves_paths):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        a = _from_storable(arrays[key], manifest["leaves"][key]["dtype"])
+        if sh_flat is not None:
+            out.append(jax.device_put(a, sh_flat[i]))
+        else:
+            out.append(jax.numpy.asarray(a))
+    return treedef.unflatten(out), step
+
+
+def _gc(ckpt_dir: Path, keep: int) -> None:
+    steps = sorted(ckpt_dir.glob("step_*"), key=lambda p: p.name)
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)

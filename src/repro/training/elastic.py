@@ -1,0 +1,71 @@
+"""Elastic scaling: resume a run on a different mesh / data-parallel size.
+
+Invariants preserved across a resize:
+* optimizer state and params reshard to the new plan's NamedShardings
+  (checkpoint.restore does the device_put);
+* the data pipeline is stateless-indexed (training/data.py), so each host
+  recomputes its slice of the SAME global batch sequence — global batch and
+  sample order are invariant under resizes;
+* the step counter lives in the checkpoint, so schedules (WSD/cosine) are
+  unaffected.
+
+``plan_for_mesh`` re-derives shardings for the new mesh; on real clusters the
+launcher calls this after jax.distributed re-initialization with the
+surviving hosts (scale-down after failure, scale-up after repair).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from ..sharding.rules import ShardingPlan, auto_plan, param_shardings
+from . import checkpoint as ckpt
+from .optimizer import OptState
+
+
+def plan_for_mesh(cfg, mesh, step_kind: str = "train") -> ShardingPlan:
+    return auto_plan(cfg, step_kind, n_model=mesh.shape.get("model", 1))
+
+
+def shardings_for(model, mesh, plan: ShardingPlan, max_seq: int = 4096):
+    from ..launch.specs import abstract_params  # local import: avoids cycle
+
+    params_sds, axes = abstract_params(model, max_seq=max_seq)
+    p_sh = param_shardings(mesh, plan, axes, params_sds)
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    repl = NamedSharding(mesh, PartitionSpec())
+    opt_sh = OptState(m=p_sh, v=p_sh, step=repl)
+    return params_sds, p_sh, opt_sh
+
+
+def elastic_resume(
+    ckpt_dir,
+    model,
+    mesh,
+    plan: Optional[ShardingPlan] = None,
+    step: Optional[int] = None,
+) -> Tuple[Any, OptState, int]:
+    """Restore (params, opt_state, step) resharded onto ``mesh``."""
+    plan = plan or plan_for_mesh(model.cfg, mesh)
+    params_sds, p_sh, opt_sh = shardings_for(model, mesh, plan)
+    like = {
+        "params": params_sds,
+        "opt": OptState(
+            m=jax.tree.map(lambda s: s, params_sds),
+            v=jax.tree.map(lambda s: s, params_sds),
+            step=jax.ShapeDtypeStruct((), jax.numpy.int32),
+        ),
+    }
+    sh = {"params": p_sh, "opt": opt_sh}
+    restored, step = ckpt.restore(ckpt_dir, like, step=step, shardings=sh)
+    return restored["params"], restored["opt"], step
+
+
+def save_for_elastic(ckpt_dir, step: int, params, opt_state: OptState, async_: bool = True):
+    tree = {"params": params, "opt": opt_state}
+    if async_:
+        return ckpt.save_async(ckpt_dir, step, tree)
+    return ckpt.save(ckpt_dir, step, tree)

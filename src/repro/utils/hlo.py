@@ -1,0 +1,164 @@
+"""Post-SPMD HLO analysis: collective traffic, trip counts, op census.
+
+``collective_stats(compiled.as_text())`` feeds the roofline collective term
+(EXPERIMENTS.md §Roofline).  Three subtleties handled here:
+
+1. jax scans lower to ``while`` loops whose bodies appear ONCE in the text but
+   execute trip-count times — we segment the module into computations, map
+   ``while(condition=%c, body=%b)`` attributes, read the trip count from the
+   loop-bound constant in the condition computation, and multiply collective
+   volume inside bodies accordingly (nested whiles compose).
+2. Operand shapes are not printed in this HLO dialect, so traffic is modeled
+   from result shapes with per-kind ring multipliers over the replica-group
+   size g: all-gather (g-1)/g x result, all-reduce 2(g-1)/g x result,
+   reduce-scatter (g-1) x result (result is the scattered shard),
+   all-to-all (g-1)/g, collective-permute 1x.
+3. ``-start``/``-done`` async pairs are counted once.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_COLL_RE = re.compile(
+    r"=\s*.*?\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_WHILE_RE = re.compile(r"while\(.*?condition=(%[\w.\-]+), body=(%[\w.\-]+)", re.DOTALL)
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes_of(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _result_bytes(line: str, kind: str) -> int:
+    lhs = line.split("=", 1)[1]
+    before = lhs[: lhs.index(kind)]
+    return sum(_shape_bytes_of(dt, dims) for dt, dims in _SHAPE_RE.findall(before))
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _traffic(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)  # collective-permute
+
+
+def _segment(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its lines (header included)."""
+    comps: Dict[str, List[str]] = {}
+    name, buf = None, []
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and "{" in line and ("(" in line):
+            hdr = line.strip()
+            if hdr.startswith("ENTRY"):
+                cname = "ENTRY"
+            elif hdr.startswith("%"):
+                cname = hdr.split(" ", 1)[0].rstrip("(")
+                cname = hdr[: hdr.index(" (")] if " (" in hdr else cname
+            else:
+                continue
+            name, buf = cname, [line]
+            comps[name] = buf
+        elif name is not None:
+            buf.append(line)
+            if line.rstrip() == "}":
+                name = None
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> Optional[int]:
+    consts = [int(m.group(1)) for line in cond_lines for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else None
+
+
+def collective_stats(hlo_text: str, default_trip: int = 1) -> Dict[str, Dict[str, float]]:
+    """Per-kind {count, result_bytes, traffic_bytes}, trip-count multiplied."""
+    comps = _segment(hlo_text)
+
+    # map body computation -> trip count
+    body_trips: Dict[str, int] = {}
+    for cname, lines in comps.items():
+        text = "\n".join(lines)
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, [])) or default_trip
+            body_trips[body] = trips
+
+    # iterate to fix nested whiles (multiply by parent trip counts)
+    def multiplier(cname: str, depth: int = 0) -> int:
+        if depth > 4:
+            return 1
+        mult = body_trips.get(cname, 1) if cname in body_trips else 1
+        # find parents: computations containing a while whose body is cname
+        for parent, lines in comps.items():
+            text = "\n".join(lines)
+            if f"body={cname}" in text and parent != cname:
+                return mult * multiplier(parent, depth + 1)
+        return mult
+
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "traffic_bytes": 0.0}
+    )
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m or "-done(" in line:
+                continue
+            kind = m.group(1)
+            rb = _result_bytes(line, kind)
+            g = _group_size(line)
+            s = stats[kind]
+            s["count"] += mult
+            s["result_bytes"] += rb * mult
+            s["traffic_bytes"] += _traffic(kind, rb, g) * mult
+    return dict(stats)
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> Tuple[float, float]:
+    traffic = sum(s["traffic_bytes"] for s in stats.values())
+    result = sum(s["result_bytes"] for s in stats.values())
+    return traffic, result
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "convolution", "custom-call")) -> Dict[str, int]:
+    census: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if f" {op}(" in line:
+                census[op] += 1
+    return dict(census)

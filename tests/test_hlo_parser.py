@@ -1,0 +1,76 @@
+"""Unit tests for the HLO collective parser (the roofline's data source)."""
+
+import textwrap
+
+from repro.utils.hlo import (
+    _group_size,
+    _shape_bytes_of,
+    _traffic,
+    collective_stats,
+    op_census,
+    total_collective_bytes,
+)
+
+SYNTH = textwrap.dedent("""\
+    HloModule jit_step, is_scheduled=true
+
+    %cond.1 (p: (s32[], f32[8])) -> pred[] {
+      %p = (s32[], f32[8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %constant.7 = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %constant.7), direction=LT
+    }
+
+    %body.2 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %p = (s32[], f32[8]) parameter(0)
+      %x = f32[8]{0} get-tuple-element(%p), index=1
+      %ar = f32[8]{0} all-reduce(%x), channel_id=1, replica_groups=[4,4]<=[16], to_apply=%add
+      %ag = f32[32]{0} all-gather(%x), channel_id=2, replica_groups=[4,4]<=[16], dimensions={0}
+      ROOT %t = (s32[], f32[8]) tuple(%i2, %ar)
+    }
+
+    ENTRY %main (a: f32[8]) -> f32[8] {
+      %a = f32[8]{0} parameter(0)
+      %big = f32[1024]{0} all-reduce(%pad), channel_id=3, replica_groups={{0,1},{2,3}}, to_apply=%add
+      %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.2
+      ROOT %r = f32[8]{0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_shape_bytes():
+    assert _shape_bytes_of("f32", "8") == 32
+    assert _shape_bytes_of("bf16", "2,3") == 12
+    assert _shape_bytes_of("pred", "") == 1
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups=[4,4]<=[16]") == 4
+    assert _group_size("replica_groups={{0,1,2},{3,4,5}}") == 3
+
+
+def test_traffic_models():
+    # all-reduce ring: 2*(g-1)/g of payload
+    assert _traffic("all-reduce", 100, 4) == 150.0
+    # all-gather: (g-1)/g of the gathered result
+    assert _traffic("all-gather", 100, 4) == 75.0
+    # degenerate group: no wire traffic
+    assert _traffic("all-reduce", 100, 1) == 0.0
+
+
+def test_while_trip_count_multiplication():
+    stats = collective_stats(SYNTH)
+    # in-loop all-reduce (f32[8]=32B) executes 12x; entry all-reduce once
+    ar = stats["all-reduce"]
+    assert ar["count"] == 12 + 1
+    assert ar["result_bytes"] == 12 * 32 + 4096
+    ag = stats["all-gather"]
+    assert ag["count"] == 12
+    assert ag["result_bytes"] == 12 * 128
+    traffic, result = total_collective_bytes(stats)
+    assert traffic > 0 and result == ar["result_bytes"] + ag["result_bytes"]
+
+
+def test_op_census():
+    c = op_census("  %f = f32[2]{0} fusion(%a), kind=kLoop\n  %d = f32[2]{0} dot(%a, %b)\n")
+    assert c.get("fusion") == 1 and c.get("dot") == 1

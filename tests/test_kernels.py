@@ -1,0 +1,173 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU), plus hypothesis property
+tests on the scheduler kernel's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KH,hd,causal,window",
+    [
+        (1, 128, 4, 4, 64, True, None),     # MHA causal
+        (2, 256, 8, 2, 64, True, None),     # GQA
+        (1, 256, 4, 1, 128, True, 64),      # MQA + sliding window
+        (2, 128, 4, 4, 32, False, None),    # bidirectional (whisper encoder)
+    ],
+)
+def test_flash_attention_sweep(B, S, H, KH, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KH, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KH, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# ------------------------------------------------------------ decode attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KH,hd,valid,window",
+    [
+        (2, 512, 8, 2, 64, 511, None),
+        (1, 256, 4, 4, 128, 100, None),
+        (2, 512, 16, 2, 64, 300, 128),   # SWA decode
+        (1, 128, 8, 1, 64, 0, None),     # first token
+    ],
+)
+def test_decode_attention_sweep(B, S, H, KH, hd, valid, window, dtype):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kc = jax.random.normal(ks[1], (B, S, KH, hd), dtype)
+    vc = jax.random.normal(ks[2], (B, S, KH, hd), dtype)
+    out = ops.decode_attention(q, kc, vc, jnp.int32(valid), window=window, block_k=128)
+    want = ref.decode_attention_ref(q, kc, vc, jnp.int32(valid), window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_decode_attention_matches_flash_last_row():
+    """Decode of the last position == last row of full flash attention."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    B, S, H, KH, hd = 1, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KH, hd))
+    v = jax.random.normal(ks[2], (B, S, KH, hd))
+    full = ref.flash_attention_ref(q, k, v, causal=True)
+    dec = ops.decode_attention(q[:, -1], k, v, jnp.int32(S - 1), block_k=64)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]), atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------------- SSD scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,P,N,chunk,block_h",
+    [
+        (2, 256, 8, 16, 32, 64, 4),
+        (1, 128, 24, 64, 128, 64, 8),   # mamba2-130m dims
+        (1, 64, 4, 16, 16, 64, 4),      # single chunk
+        (2, 192, 6, 16, 32, 64, 6),     # H % block_h fallback
+    ],
+)
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, block_h, dtype):
+    ks = jax.random.split(jax.random.key(3), 5)
+    x = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, S, 1, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, 1, N)) * 0.3).astype(dtype)
+    y, st = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, block_h=block_h)
+    yr, sr = ref.ssd_scan_ref(
+        x.astype(jnp.float32), dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk
+    )
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), **tol)
+
+
+def test_ssd_scan_state_carry_equals_two_halves():
+    """Scanning S tokens == scanning S/2 then S/2 with carried state."""
+    ks = jax.random.split(jax.random.key(4), 5)
+    B, S, H, P, N, chunk = 1, 128, 4, 16, 16, 32
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, 1, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, 1, N)) * 0.3
+    y_full, st_full = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk)
+    h = S // 2
+    y1, st1 = ref.ssd_scan_ref(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h], chunk)
+    y2, st2 = ref.ssd_scan_ref(x[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:], chunk, init_state=st1)
+    np.testing.assert_allclose(np.asarray(y_full[:, h:]), np.asarray(y2), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2), atol=1e-4, rtol=1e-3)
+
+
+# ------------------------------------------------------------- scheduler step
+@pytest.mark.parametrize("R,F,W", [(16, 4, 8), (64, 10, 16), (8, 1, 4), (128, 40, 5)])
+def test_sched_step_sweep(R, F, W):
+    ks = jax.random.split(jax.random.key(5), 3)
+    funcs = jax.random.randint(ks[0], (R,), 0, F)
+    idle = jax.random.randint(ks[1], (F, W), 0, 3)
+    conns = jax.random.randint(ks[2], (W,), 0, 5)
+    a, warm, i2, c2 = ops.sched_step(funcs, idle, conns)
+    ar, wr, ir, cr = ref.sched_step_ref(funcs, idle, conns)
+    assert jnp.all(a == ar) and jnp.all(warm == wr.astype(jnp.int32))
+    assert jnp.all(i2 == ir) and jnp.all(c2 == cr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    r=st.integers(1, 40),
+    f=st.integers(1, 8),
+    w=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sched_step_invariants(r, f, w, seed):
+    """Property: conservation + warm-iff-idle-available (Algorithm 1)."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    funcs = jax.random.randint(ks[0], (r,), 0, f)
+    idle = jax.random.randint(ks[1], (f, w), 0, 3)
+    conns = jax.random.randint(ks[2], (w,), 0, 4)
+    a, warm, i2, c2 = ref.sched_step_ref(funcs, idle, conns)
+    a, warm, i2, c2 = map(np.asarray, (a, warm, i2, c2))
+    # every request assigned to a real worker
+    assert ((a >= 0) & (a < w)).all()
+    # connections increase by exactly R in total
+    assert c2.sum() == np.asarray(conns).sum() + r
+    # idle entries only ever decrease, by exactly the number of warm hits
+    assert (i2 <= np.asarray(idle)).all()
+    assert np.asarray(idle).sum() - i2.sum() == warm.sum()
+    # a request is warm iff its function had an idle instance at its turn
+    # (checked constructively by replay)
+    idle_sim = np.asarray(idle).copy()
+    conns_sim = np.asarray(conns).copy()
+    for i in range(r):
+        fi = int(funcs[i])
+        has = idle_sim[fi].sum() > 0
+        assert bool(warm[i]) == bool(has)
+        if has:
+            row = np.where(idle_sim[fi] > 0, conns_sim, 2**30)
+            wi = int(row.argmin())
+            idle_sim[fi, wi] -= 1
+        else:
+            wi = int(conns_sim.argmin())
+        assert wi == int(a[i])
+        conns_sim[wi] += 1

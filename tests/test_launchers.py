@@ -1,0 +1,36 @@
+"""The launcher CLIs (train/serve) run end to end."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).parent.parent
+ENV = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+
+
+def _run(mod, *args, timeout=240):
+    return subprocess.run([sys.executable, "-m", mod, *args],
+                          capture_output=True, text=True, env=ENV, cwd=ROOT,
+                          timeout=timeout)
+
+
+def test_train_cli(tmp_path):
+    out = _run("repro.launch.train", "--arch", "mamba2-130m", "--steps", "12",
+               "--ckpt-dir", str(tmp_path), "--ckpt-every", "6")
+    assert out.returncode == 0, out.stderr
+    assert "done: 12 steps" in out.stdout
+    assert list(tmp_path.glob("step_*")), "checkpoint not written"
+    # resume from the checkpoint
+    out2 = _run("repro.launch.train", "--arch", "mamba2-130m", "--steps", "14",
+                "--ckpt-dir", str(tmp_path), "--resume")
+    assert out2.returncode == 0, out2.stderr
+    assert "resumed from step" in out2.stdout
+
+
+def test_serve_cli():
+    out = _run("repro.launch.serve", "--scheduler", "hiku", "--workers", "2",
+               "--endpoints", "2", "--requests", "5", "--fail-at", "2")
+    assert out.returncode == 0, out.stderr
+    assert "failed; worker" in out.stdout  # failure + elastic join happened
+    assert "summary:" in out.stdout

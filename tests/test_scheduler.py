@@ -1,0 +1,163 @@
+"""Scheduler semantics: Algorithm 1, baselines, and the JAX formulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ARRIVAL,
+    EVICT,
+    FINISH,
+    HikuScheduler,
+    available_schedulers,
+    init_state,
+    make_scheduler,
+    sched_many,
+    sched_step,
+)
+
+
+def test_registry_has_paper_baselines():
+    have = set(available_schedulers())
+    assert {"hiku", "ch", "ch_bl", "rj_ch", "least_connections", "random"} <= have
+
+
+class _FirstChoice:
+    """Deterministic stand-in for random.Random: always pick first/lowest."""
+
+    def choice(self, xs):
+        return min(xs)
+
+
+def test_hiku_algorithm1_semantics():
+    s = HikuScheduler(3, seed=0)
+    s.rng = _FirstChoice()
+    # no idle instances -> fallback least-connections (all zero -> worker 0)
+    w = s.schedule("f1")
+    assert w == 0 and s.conns[0] == 1
+    # finish -> pull enqueue into PQ_f1
+    s.on_finish(0, "f1")
+    assert s.queue_depth("f1") == 1
+    # next request for f1 MUST be pulled from the queue (warm)
+    w = s.schedule("f1")
+    assert w == 0 and s.queue_depth("f1") == 0
+    # requests for other functions do not touch PQ_f1 (fallback path instead)
+    s.on_finish(0, "f1")
+    w2 = s.schedule("f2")
+    assert s.queue_depth("f1") == 1  # PQ_f1 untouched by the f2 request
+    assert w2 == 0  # LC tie-break: deterministic stub picks lowest index
+
+
+def test_hiku_dequeues_least_loaded():
+    s = HikuScheduler(3, seed=0)
+    s.rng = _FirstChoice()
+    # enqueue workers 1 and 2 with different loads
+    s.conns = {0: 0, 1: 5, 2: 2}
+    s.idle_queues["f"] = [1, 2]
+    w = s.schedule("f")
+    assert w == 2  # least-loaded enqueued worker, NOT global least-loaded (0)
+
+
+def test_hiku_eviction_notification():
+    s = HikuScheduler(2, seed=0)
+    s.on_finish(1, "f")
+    s.on_finish(1, "f")
+    assert s.queue_depth("f") == 2
+    s.on_evict(1, "f")  # removes FIRST occurrence only (Algorithm 1 l.19)
+    assert s.queue_depth("f") == 1
+
+
+def test_hiku_worker_removal_purges_queues():
+    s = HikuScheduler(3, seed=0)
+    s.on_finish(2, "a")
+    s.on_finish(2, "b")
+    s.on_worker_removed(2)
+    assert s.queue_depth() == 0
+    assert all(s.schedule(f) != 2 for f in ("a", "b", "c"))
+
+
+def test_ch_locality_and_stability():
+    s = make_scheduler("ch", 5, seed=1)
+    w1 = [s.select("func-x") for _ in range(10)]
+    assert len(set(w1)) == 1  # perfect locality
+    # removing an unrelated worker must not remap func-x (consistency)
+    target = w1[0]
+    other = (target + 1) % 5
+    s.on_worker_removed(other)
+    assert s.select("func-x") == target
+
+
+def test_chbl_respects_bound():
+    s = make_scheduler("ch_bl", 4, seed=0, threshold=1.25)
+    target = s.ring.lookup("hot")
+    s.conns = {w: 0 for w in s.workers}
+    s.conns[target] = 10  # overloaded far beyond bound
+    w = s.select("hot")
+    assert w != target  # spills to next non-overloaded clockwise
+
+
+# ------------------------------------------------- python <-> jax equivalence
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_events=st.integers(1, 60),
+       F=st.integers(1, 5), W=st.integers(1, 6))
+def test_jax_sched_equivalent_to_python(seed, n_events, F, W):
+    """Deterministic-tie-break JIQ: array formulation == Algorithm 1 object."""
+    rng = np.random.default_rng(seed)
+    py = HikuScheduler(W, seed=0)
+    py.rng = _FirstChoice()
+    state = init_state(F, W)
+    events = []
+    running = []  # (worker, func) active
+    for _ in range(n_events):
+        kind = rng.choice([ARRIVAL, FINISH]) if running else ARRIVAL
+        if kind == ARRIVAL:
+            f = int(rng.integers(0, F))
+            events.append((ARRIVAL, f, -1))
+        else:
+            w, f = running.pop(int(rng.integers(0, len(running))))
+            events.append((FINISH, f, w))
+        # drive python scheduler
+        k, f, w = events[-1]
+        if k == ARRIVAL:
+            wpy = py.schedule(str(f))
+            running.append((wpy, f))
+            events[-1] = (ARRIVAL, f, -1, wpy)  # remember for the check
+        else:
+            py.on_finish(w, str(f))
+            events[-1] = (FINISH, f, w, -1)
+    ev_arr = jnp.array([(k, f, w) for (k, f, w, _) in events], jnp.int32)
+    state, (ws, warm) = sched_many(state, ev_arr, key=None)
+    for i, (k, f, w, wpy) in enumerate(events):
+        if k == ARRIVAL:
+            assert int(ws[i]) == wpy, f"event {i}: jax={int(ws[i])} py={wpy}"
+    # final connection counts agree
+    np.testing.assert_array_equal(
+        np.asarray(state.conns), np.array([py.conns[w] for w in range(W)])
+    )
+
+
+def test_jax_sched_evict():
+    state = init_state(2, 3)
+    ev = jnp.array([
+        (ARRIVAL, 0, -1),  # cold -> worker 0
+        (FINISH, 0, 0),    # enqueue PQ_0 <- w0
+        (EVICT, 0, 0),     # notification removes it
+        (ARRIVAL, 0, -1),  # must be cold again
+    ], jnp.int32)
+    state, (ws, warm) = sched_many(state, ev)
+    assert not bool(warm[3])
+    assert int(state.idle.sum()) == 0
+
+
+def test_jax_sched_random_tiebreak_uniform():
+    """Fallback random tie-break covers tied workers (Algorithm 1 l.10)."""
+    state = init_state(1, 4)
+    ev = jnp.array([(ARRIVAL, 0, -1)], jnp.int32)
+    picks = set()
+    for i in range(40):
+        _, (w, _) = sched_many(state, ev, key=jax.random.key(i))
+        picks.add(int(w[0]))
+    assert picks == {0, 1, 2, 3}

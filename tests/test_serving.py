@@ -1,0 +1,68 @@
+"""Serving engine on real JAX models: lifecycle, cold/warm, eviction
+notifications, failures — the control plane of Figure 1/2."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.serving import Endpoint, ServingEngine
+
+
+def _tiny_endpoint(name, seed=0):
+    cfg = get_config("mamba2_130m").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=32, vocab=64,
+                              ssm=dataclasses.replace(cfg.ssm, d_state=8, headdim=8))
+    return Endpoint(name=name, cfg=cfg, seed=seed, max_cache_len=32)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    eps = [_tiny_endpoint(f"f{i}", seed=i) for i in range(3)]
+    return ServingEngine(eps, n_workers=2, scheduler="hiku", keep_alive_s=600.0)
+
+
+def test_cold_then_warm(engine):
+    r1 = engine.submit("f0")
+    r2 = engine.submit("f0")
+    assert r1.cold and not r2.cold
+    # cold start must be measurably slower (compile + init) — Table I effect
+    assert r1.latency_ms > 1.5 * r2.latency_ms
+
+
+def test_pull_locality(engine):
+    """Repeated requests for one function stick to the warm worker."""
+    first = engine.submit("f1")
+    workers = {engine.submit("f1").worker for _ in range(4)}
+    assert workers == {first.worker}
+    assert all(not engine.records[-i].cold for i in range(1, 5))
+
+
+def test_scheduler_overhead_negligible(engine):
+    """Paper §V-B: decision overhead ~0.015 ms; ours must stay sub-ms."""
+    s = engine.summary()
+    assert s["sched_overhead_ms"] < 1.0
+
+
+def test_worker_failure_reroutes(engine):
+    r = engine.submit("f2")
+    dead = r.worker
+    engine.fail_worker(dead)
+    r2 = engine.submit("f2")
+    assert r2.worker != dead
+    assert r2.cold  # instance was lost with the worker
+    engine.add_worker(dead)  # restore for other tests
+
+
+def test_eviction_notifies_scheduler():
+    eps = [_tiny_endpoint(f"g{i}", seed=i) for i in range(4)]
+    # pool sized to hold ~1 instance -> every new function evicts the previous
+    small = eps[0].est_bytes() + eps[1].est_bytes() // 2
+    eng = ServingEngine(eps, n_workers=1, scheduler="hiku", mem_pool_bytes=small)
+    eng.submit("g0")
+    assert eng.sched.queue_depth("g0") == 1
+    eng.submit("g1")  # forces LRU eviction of g0's instance
+    assert eng.sched.queue_depth("g0") == 0  # notification removed it
+    r = eng.submit("g0")
+    assert r.cold

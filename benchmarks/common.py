@@ -5,6 +5,11 @@ copies, Azure-skewed weights), closed-loop VUs at {20, 50, 100}, equal time
 per VU level, N seeded runs per scheduler, identical seeded workloads across
 schedulers.  Results are cached in-process so every figure module reads the
 same matrix, and persisted to benchmarks/results/matrix.json.
+
+Per-seed workloads (VU programs and service-time fluctuation bands) are
+memoized inside core.trace / core.simulator, so the four schedulers replay
+the same generated workload instead of regenerating it per cell; matrix wall
+time is tracked by benchmarks/bench_sim_speed.py.
 """
 
 from __future__ import annotations

@@ -26,6 +26,7 @@ def main(argv=None) -> None:
         bench_latency,
         bench_overhead,
         bench_pull_dispatch,
+        bench_sim_speed,
         bench_table1,
         bench_trace,
         bench_throughput,
@@ -42,6 +43,7 @@ def main(argv=None) -> None:
         "overhead": bench_overhead,
         "kernels": bench_kernels,
         "pull_dispatch": bench_pull_dispatch,
+        "sim_speed": bench_sim_speed,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -3,7 +3,16 @@
 from . import baselines as _baselines  # noqa: F401  (registers schedulers)
 from . import hiku as _hiku  # noqa: F401
 from .hiku import HikuScheduler
-from .jax_sched import ARRIVAL, EVICT, FINISH, JIQState, init_state, sched_many, sched_step
+from .jax_sched import (
+    ARRIVAL,
+    EVICT,
+    FINISH,
+    JIQState,
+    init_state,
+    sched_many,
+    sched_many_fused,
+    sched_step,
+)
 from .metrics import RunMetrics, latency_cdf, load_cv_per_second, summarize
 from .scheduler import Scheduler, available_schedulers, make_scheduler
 from .simulator import SimConfig, Simulator
@@ -28,6 +37,7 @@ __all__ = [
     "make_scheduler",
     "make_vu_programs",
     "sched_many",
+    "sched_many_fused",
     "sched_step",
     "summarize",
 ]

@@ -120,6 +120,58 @@ def sched_many(
     return jax.lax.scan(body, state, xs)
 
 
+def sched_many_fused(
+    state: JIQState,
+    events: jax.Array,
+    key: jax.Array | None = None,
+    chunk: int = 1024,
+    interpret: bool | None = None,
+) -> Tuple[JIQState, Tuple[jax.Array, jax.Array]]:
+    """``sched_many`` with the whole stream fused into chunked Pallas dispatches.
+
+    Each ``chunk`` of mixed (ARRIVAL|FINISH|EVICT) events costs *one* kernel
+    dispatch (kernels/sched_step.sched_events) instead of one scan iteration
+    per event; state is carried between chunks.  Bit-exact against
+    ``sched_many(state, events, key=None)``.
+
+    Fallback rules: with a PRNG ``key`` (randomized tie-breaks live in the
+    scan path) or off-TPU the scan path is used, keeping this a drop-in call
+    on any backend; ``interpret=True`` forces the fused kernel in interpreter
+    mode (CPU tests).
+    """
+    if key is not None:
+        return sched_many(state, events, key)
+    if not interpret and jax.default_backend() != "tpu":
+        # off-TPU the native kernel can't lower; only interpret=True forces it
+        return sched_many(state, events, None)
+    from ..kernels import ops  # deferred: kernels are optional off the hot path
+
+    idle, conns = state.idle, state.conns
+    n = events.shape[0]
+    ws, warms = [], []
+    for lo in range(0, n, chunk):
+        ev = events[lo : lo + chunk]
+        tail = chunk - ev.shape[0]
+        if tail:
+            # pad the ragged last chunk with kind=3 no-op events (func/worker
+            # 0 keep the row loads in bounds; an unknown kind updates nothing)
+            # so every dispatch shares one compiled (chunk,) shape
+            pad = jnp.zeros((tail, 3), jnp.int32).at[:, 0].set(3)
+            ev = jnp.concatenate([ev, pad])
+        a, warm, idle, conns = ops.sched_events(
+            ev[:, 0], ev[:, 1], ev[:, 2], idle, conns, interpret=interpret
+        )
+        if tail:
+            a, warm = a[:-tail], warm[:-tail]
+        ws.append(a)
+        warms.append(warm)
+    ws_all = jnp.concatenate(ws) if ws else jnp.zeros((0,), jnp.int32)
+    warm_all = (
+        jnp.concatenate(warms).astype(bool) if warms else jnp.zeros((0,), bool)
+    )
+    return JIQState(idle, conns), (ws_all, warm_all)
+
+
 # ---------------------------------------------------------------- invariants
 def check_invariants(state: JIQState) -> bool:
     """Structural invariants used by property tests."""

@@ -14,6 +14,24 @@ Fidelity notes (recorded per DESIGN.md §2):
   cold-warm delta), executed under processor sharing like the paper's VMs;
 * per-request service fluctuation is seeded by request identity so every
   scheduler replays identical stochastic demand (paper's fairness device).
+
+Hot-path engineering (PR 1): the event engine is bit-for-bit equivalent to
+the seed implementation (tests/test_equivalence.py proves identical
+``RequestRecord`` streams against the frozen copy in tests/legacy) but about
+an order of magnitude faster at scale:
+
+* service fluctuations are pre-generated in vectorized bands via
+  ``trace.service_fluctuations`` (same ``(seed, vu, ev_idx)`` identity, same
+  doubles) instead of constructing a ``default_rng`` per request;
+* per-function idle lists are kept in ascending ``last_used`` order, so LRU
+  eviction inspects one head per function and keep-alive sweeps stop at the
+  first unexpired instance instead of rescanning every idle sandbox;
+* each worker caches its running-set minimum remaining time, so scheduling
+  the next completion no longer rescans all running tasks (processor sharing
+  subtracts the same amount from every task, which preserves the minimum);
+* the event loop dispatches on integer event kinds with pre-resolved
+  function metadata (name/memory/latency arrays) instead of per-event
+  getattr + dataclass attribute chases.
 """
 
 from __future__ import annotations
@@ -21,12 +39,12 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .scheduler import Scheduler
-from .trace import FunctionSpec, VUProgram, make_functions, make_vu_programs
+from .trace import FunctionSpec, VUProgram, make_functions, make_vu_programs, service_fluctuations
 
 
 @dataclasses.dataclass
@@ -44,8 +62,7 @@ class SimConfig:
     retry_delay_s: float = 0.05  # resubmit delay after worker failure
 
 
-@dataclasses.dataclass
-class RequestRecord:
+class RequestRecord(NamedTuple):
     t_submit: float
     t_complete: float
     func: int
@@ -56,6 +73,11 @@ class RequestRecord:
     @property
     def latency_ms(self) -> float:
         return (self.t_complete - self.t_submit) * 1e3
+
+
+# integer event kinds; the *push order* (and with it the tie-breaking
+# sequence number) is part of the replay contract with the seed engine
+_SUBMIT, _COMPLETE, _RESUBMIT, _SWEEP, _FAIL, _ADD = 0, 1, 2, 3, 4, 5
 
 
 class _Instance:
@@ -84,73 +106,111 @@ class _Task:
 class _Worker:
     """Processor-sharing server with a sandbox memory pool."""
 
+    __slots__ = (
+        "wid", "cores", "pool_mb", "running", "idle", "busy_mem_mb", "idle_mem_mb",
+        "pending", "last_t", "version", "alive", "_min_rem", "_min_ok", "_sched_t",
+    )
+
     def __init__(self, wid: int, cfg: SimConfig):
         self.wid = wid
         self.cores = cfg.cores_per_worker
         self.pool_mb = cfg.mem_pool_mb
         self.running: List[_Task] = []
-        self.idle: Dict[int, List[_Instance]] = {}  # func -> idle instances
+        # func -> idle instances in ascending last_used order (append-newest /
+        # evict-oldest-first keeps the invariant; see evict_lru)
+        self.idle: Dict[int, List[_Instance]] = {}
         self.busy_mem_mb = 0.0
         self.idle_mem_mb = 0.0
         self.pending: List[_Task] = []  # waiting for memory
         self.last_t = 0.0
         self.version = 0  # invalidates stale completion events
         self.alive = True
+        # cached min(task.remaining_s) over running; valid while _min_ok.
+        # Advancing subtracts the identical dt*rate from every task, which
+        # preserves both the argmin and (bitwise) the minimum value.
+        self._min_rem = 0.0
+        self._min_ok = True
+        self._sched_t: Optional[float] = None  # time of the live completion event
 
     # ---------------------------------------------------------------- PS
-    def rate(self) -> float:
-        n = len(self.running)
-        return 1.0 if n == 0 else min(1.0, self.cores / n)
-
     def advance(self, t: float) -> None:
         dt = t - self.last_t
-        if dt > 0 and self.running:
-            r = self.rate()
-            for task in self.running:
-                task.remaining_s -= dt * r
+        running = self.running
+        if dt > 0 and running:
+            n = len(running)
+            cores = self.cores
+            d = dt if cores >= n else dt * (cores / n)
+            for task in running:
+                task.remaining_s -= d
+            if self._min_ok:
+                self._min_rem -= d
         self.last_t = t
 
+    def start(self, task: _Task) -> None:
+        self.running.append(task)
+        if self._min_ok:
+            if len(self.running) == 1 or task.remaining_s < self._min_rem:
+                self._min_rem = task.remaining_s
+
     def next_completion(self, t: float) -> Optional[float]:
-        if not self.running:
+        running = self.running
+        if not running:
             return None
-        r = self.rate()
-        min_rem = min(task.remaining_s for task in self.running)
-        return t + max(0.0, min_rem) / r
+        if not self._min_ok:
+            m = running[0].remaining_s
+            for task in running:
+                rs = task.remaining_s
+                if rs < m:
+                    m = rs
+            self._min_rem = m
+            self._min_ok = True
+        m = self._min_rem
+        if m <= 0.0:
+            m = 0.0
+        n = len(running)
+        cores = self.cores
+        return t + (m if cores >= n else m / (cores / n))
 
     # ------------------------------------------------------------- memory
     def mem_usage(self) -> float:
         return self.busy_mem_mb + self.idle_mem_mb
 
-    def has_idle(self, func: int) -> bool:
-        return bool(self.idle.get(func))
-
     def pop_idle(self, func: int) -> _Instance:
-        inst = self.idle[func].pop()
-        if not self.idle[func]:
+        lst = self.idle[func]
+        inst = lst.pop()
+        if not lst:
             del self.idle[func]
         self.idle_mem_mb -= inst.mem_mb
         return inst
-
-    def push_idle(self, inst: _Instance, t: float) -> None:
-        inst.last_used = t
-        self.idle.setdefault(inst.func, []).append(inst)
-        self.idle_mem_mb += inst.mem_mb
 
     def evict_lru(self) -> Optional[_Instance]:
-        """Evict the least-recently-used idle instance (force eviction)."""
-        best: Optional[Tuple[int, int]] = None
+        """Evict the least-recently-used idle instance (force eviction).
+
+        Each per-func list is ascending in ``last_used``, so the global LRU
+        is the strictly smallest head across funcs — first such func in dict
+        order, exactly the instance the seed engine's full scan selected.
+        """
+        best_func = -1
+        best_last = None
         for func, lst in self.idle.items():
-            for i, inst in enumerate(lst):
-                if best is None or inst.last_used < self.idle[best[0]][best[1]].last_used:
-                    best = (func, i)
-        if best is None:
+            h = lst[0].last_used
+            if best_last is None or h < best_last:
+                best_last = h
+                best_func = func
+        if best_last is None:
             return None
-        func, i = best
-        inst = self.idle[func].pop(i)
-        if not self.idle[func]:
-            del self.idle[func]
+        lst = self.idle[best_func]
+        inst = lst.pop(0)
+        if not lst:
+            del self.idle[best_func]
         self.idle_mem_mb -= inst.mem_mb
         return inst
+
+
+# Shared fluctuation bands: (seed, n_vus, sigma) -> {"cols": int, "rows":
+# list-of-lists}.  Rows are grown in place, so the 4-scheduler benchmark
+# matrix pays for each (seed, vu, ev) draw once, not once per scheduler.
+_FLUCT_CACHE: Dict[Tuple[int, int, float], Dict] = {}
 
 
 class Simulator:
@@ -168,16 +228,22 @@ class Simulator:
         self.funcs = list(funcs) if funcs is not None else make_functions(seed=seed)
         self.seed = seed
         self.workers = {w: _Worker(w, self.cfg) for w in range(self.cfg.n_workers)}
-        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._heap: List[Tuple[float, int, int, tuple]] = []
         self._seq = itertools.count()
         self.t = 0.0
         self.records: List[RequestRecord] = []
         self.assignments: List[Tuple[float, int]] = []  # (t, worker)
         self._failures: List[Tuple[float, int]] = []
         self._additions: List[Tuple[float, int]] = []
+        self.n_events = 0  # heap events processed (bench_sim_speed)
+        # pre-resolved per-function metadata (hot-loop lookups)
+        self._fnames = [f.name for f in self.funcs]
+        self._fmem = [f.mem_mb for f in self.funcs]
+        self._fcold = [f.cold_ms for f in self.funcs]
+        self._fwarm = [f.warm_ms for f in self.funcs]
 
     # ------------------------------------------------------------- events
-    def _push(self, t: float, kind: str, payload: tuple = ()) -> None:
+    def _push(self, t: float, kind: int, payload: tuple = ()) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
     def inject_failure(self, t: float, worker: int) -> None:
@@ -185,6 +251,27 @@ class Simulator:
 
     def inject_worker(self, t: float, worker: int) -> None:
         self._additions.append((t, worker))
+
+    # ------------------------------------------------------- fluctuations
+    def _fluct_entry(self, n_vus: int) -> Dict:
+        key = (self.seed, n_vus, self.cfg.exec_sigma)
+        entry = _FLUCT_CACHE.get(key)
+        if entry is None:
+            if len(_FLUCT_CACHE) >= 8:
+                _FLUCT_CACHE.clear()
+            entry = _FLUCT_CACHE[key] = {"cols": 0, "rows": [[] for _ in range(n_vus)]}
+        return entry
+
+    def _extend_fluct(self, upto: int) -> None:
+        """Grow the shared fluctuation band to cover event index ``upto``."""
+        entry = self._fluct
+        cols = entry["cols"]
+        new_cols = max(upto + 1, cols * 2, 32)
+        sigma = self.cfg.exec_sigma
+        band = service_fluctuations(self.seed, len(entry["rows"]), new_cols - cols, sigma, ev_start=cols)
+        for row, extra in zip(entry["rows"], band.tolist()):
+            row.extend(extra)
+        entry["cols"] = new_cols
 
     # --------------------------------------------------------------- run
     def run(
@@ -200,125 +287,161 @@ class Simulator:
             n_events = int(duration_s * 4) + 16
             programs = make_vu_programs(self.funcs, n_vus, n_events, self.seed)
         self._programs = programs
+        self._prog_funcs = [p.func_idx.tolist() for p in programs]
+        self._prog_sleeps = [p.sleep_s.tolist() for p in programs]
         self._vu_pos = [0] * n_vus
         self._deadline = t_start + duration_s
+        self._fluct = self._fluct_entry(n_vus)
+        self._overhead_s = cfg.overhead_ms / 1e3
 
         for vu in range(n_vus):
-            self._push(t_start, "submit", (vu,))
-        self._push(t_start + cfg.sweep_every_s, "sweep")
+            self._push(t_start, _SUBMIT, (vu,))
+        self._push(t_start + cfg.sweep_every_s, _SWEEP)
         for t, w in self._failures:
-            self._push(t, "fail", (w,))
+            self._push(t, _FAIL, (w,))
         for t, w in self._additions:
-            self._push(t, "add_worker", (w,))
+            self._push(t, _ADD, (w,))
 
-        while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
-            if t > self._deadline:
+        heap = self._heap
+        pop = heapq.heappop
+        deadline = self._deadline
+        n = 0
+        while heap:
+            t, _, kind, payload = pop(heap)
+            if t > deadline:
                 break
             self.t = t
-            getattr(self, f"_ev_{kind}")(*payload)
+            n += 1
+            if kind == _SUBMIT:
+                self._ev_submit(payload[0])
+            elif kind == _COMPLETE:
+                self._ev_complete(payload[0], payload[1])
+            elif kind == _RESUBMIT:
+                self._dispatch(payload[0])
+            elif kind == _SWEEP:
+                self._ev_sweep()
+            elif kind == _FAIL:
+                self._ev_fail(payload[0])
+            else:
+                self._ev_add_worker(payload[0])
+        self.n_events += n
         return self.records
 
     # ------------------------------------------------------------ handlers
     def _ev_submit(self, vu: int) -> None:
-        prog = self._programs[vu]
         pos = self._vu_pos[vu]
-        if pos >= len(prog.func_idx) or self.t > self._deadline:
+        funcs = self._prog_funcs[vu]
+        if pos >= len(funcs) or self.t > self._deadline:
             return
         self._vu_pos[vu] = pos + 1
-        func = int(prog.func_idx[pos])
-        task = _Task(func, vu, pos, self.t)
-        self._dispatch(task)
+        self._dispatch(_Task(funcs[pos], vu, pos, self.t))
 
     def _dispatch(self, task: _Task) -> None:
-        fname = self.funcs[task.func].name
+        fname = self._fnames[task.func]
         w = self.sched.schedule(fname)
-        if w not in self.workers or not self.workers[w].alive:
+        worker = self.workers.get(w)
+        if worker is None or not worker.alive:
             # scheduler view raced with a failure; retry shortly
             self.sched.on_cancel(w, fname)
-            self._push(self.t + self.cfg.retry_delay_s, "resubmit", (task,))
+            self._push(self.t + self.cfg.retry_delay_s, _RESUBMIT, (task,))
             return
         task.worker = w
         self.assignments.append((self.t, w))
-        self._start_or_queue(self.workers[w], task)
-
-    def _ev_resubmit(self, task: _Task) -> None:
-        self._dispatch(task)
+        self._start_or_queue(worker, task)
 
     def _start_or_queue(self, worker: _Worker, task: _Task) -> None:
         worker.advance(self.t)
-        spec = self.funcs[task.func]
-        if worker.has_idle(task.func):
-            inst = worker.pop_idle(task.func)
+        func = task.func
+        if func in worker.idle:
+            inst = worker.pop_idle(func)
             worker.busy_mem_mb += inst.mem_mb
             task.cold = False
+            base_ms = self._fwarm[func]
         else:
             # cold path: make room for a new sandbox
-            while worker.mem_usage() + spec.mem_mb > worker.pool_mb:
+            mem = self._fmem[func]
+            while worker.busy_mem_mb + worker.idle_mem_mb + mem > worker.pool_mb:
                 evicted = worker.evict_lru()
                 if evicted is None:
                     break
-                self.sched.on_evict(worker.wid, self.funcs[evicted.func].name)
-            if worker.mem_usage() + spec.mem_mb > worker.pool_mb:
+                self.sched.on_evict(worker.wid, self._fnames[evicted.func])
+            if worker.busy_mem_mb + worker.idle_mem_mb + mem > worker.pool_mb:
                 worker.pending.append(task)  # waits for memory
                 return
-            worker.busy_mem_mb += spec.mem_mb
+            worker.busy_mem_mb += mem
             task.cold = True
-        task.work_s = self._service_s(task)
-        task.remaining_s = task.work_s
-        worker.running.append(task)
+            base_ms = self._fcold[func]
+        row = self._fluct["rows"][task.vu]
+        if task.ev_idx >= self._fluct["cols"]:
+            self._extend_fluct(task.ev_idx)
+            row = self._fluct["rows"][task.vu]
+        task.work_s = task.remaining_s = base_ms * row[task.ev_idx] / 1e3
+        worker.start(task)
         self._reschedule(worker)
 
-    def _service_s(self, task: _Task) -> float:
-        spec = self.funcs[task.func]
-        rng = np.random.default_rng((self.seed, task.vu, task.ev_idx))
-        sigma = self.cfg.exec_sigma
-        fluct = rng.lognormal(mean=-0.5 * sigma**2, sigma=sigma)
-        base_ms = spec.cold_ms if task.cold else spec.warm_ms
-        return base_ms * fluct / 1e3
-
     def _reschedule(self, worker: _Worker) -> None:
-        worker.version += 1
         nxt = worker.next_completion(self.t)
         if nxt is not None:
-            self._push(nxt, "complete", (worker.wid, worker.version))
+            if nxt == worker._sched_t:
+                return  # the pending completion event is already correct
+            worker.version += 1
+            worker._sched_t = nxt
+            heapq.heappush(
+                self._heap, (nxt, next(self._seq), _COMPLETE, (worker.wid, worker.version))
+            )
+        elif worker._sched_t is not None:
+            worker.version += 1  # invalidate the now-wrong pending event
+            worker._sched_t = None
 
     def _ev_complete(self, wid: int, version: int) -> None:
         worker = self.workers.get(wid)
         if worker is None or version != worker.version or not worker.alive:
             return
+        worker._sched_t = None  # this event is the live one; it just fired
         worker.advance(self.t)
-        done = [task for task in worker.running if task.remaining_s <= 1e-12]
-        worker.running = [task for task in worker.running if task.remaining_s > 1e-12]
-        for task in done:
-            self._complete(worker, task)
+        done = []
+        keep = []
+        for task in worker.running:
+            (done if task.remaining_s <= 1e-12 else keep).append(task)
+        if done:
+            worker.running = keep
+            worker._min_ok = False
+            for task in done:
+                self._complete(worker, task)
         # pending tasks may now fit (an instance went idle and can be evicted)
         self._drain_pending(worker)
         self._reschedule(worker)
 
     def _complete(self, worker: _Worker, task: _Task) -> None:
-        spec = self.funcs[task.func]
-        worker.busy_mem_mb -= spec.mem_mb
-        worker.push_idle(_Instance(task.func, spec.mem_mb, self.t), self.t)
-        self.sched.on_finish(worker.wid, spec.name)
-        t_done = self.t + self.cfg.overhead_ms / 1e3
+        func = task.func
+        mem = self._fmem[func]
+        worker.busy_mem_mb -= mem
+        t = self.t
+        lst = worker.idle.get(func)
+        if lst is None:
+            worker.idle[func] = [_Instance(func, mem, t)]
+        else:
+            lst.append(_Instance(func, mem, t))  # t monotone: stays ascending
+        worker.idle_mem_mb += mem
+        self.sched.on_finish(worker.wid, self._fnames[func])
+        t_done = t + self._overhead_s
         self.records.append(
-            RequestRecord(task.t_submit, t_done, task.func, worker.wid, task.cold, task.vu)
+            RequestRecord(task.t_submit, t_done, func, worker.wid, task.cold, task.vu)
         )
         # closed loop: VU thinks, then submits its next request
-        prog = self._programs[task.vu]
-        sleep = float(prog.sleep_s[min(task.ev_idx, len(prog.sleep_s) - 1)])
-        self._push(t_done + sleep, "submit", (task.vu,))
+        sleeps = self._prog_sleeps[task.vu]
+        ei = task.ev_idx
+        sleep = sleeps[ei] if ei < len(sleeps) else sleeps[-1]
+        heapq.heappush(self._heap, (t_done + sleep, next(self._seq), _SUBMIT, (task.vu,)))
 
     def _drain_pending(self, worker: _Worker) -> None:
         if not worker.pending:
             return
         waiting, worker.pending = worker.pending, []  # _start_or_queue may re-append
         for task in waiting:
-            spec = self.funcs[task.func]
             if (
-                worker.has_idle(task.func)
-                or worker.mem_usage() + spec.mem_mb <= worker.pool_mb
+                task.func in worker.idle
+                or worker.mem_usage() + self._fmem[task.func] <= worker.pool_mb
                 or worker.idle_mem_mb > 0
             ):
                 self._start_or_queue(worker, task)
@@ -327,24 +450,30 @@ class Simulator:
 
     def _ev_sweep(self) -> None:
         cfg = self.cfg
+        ka = cfg.keep_alive_s
         for worker in self.workers.values():
             if not worker.alive:
                 continue
             worker.advance(self.t)
-            for func in list(worker.idle):
-                keep = []
-                for inst in worker.idle[func]:
-                    if self.t - inst.last_used > cfg.keep_alive_s:
+            if worker.idle:
+                t = self.t
+                for func in list(worker.idle):
+                    lst = worker.idle[func]
+                    # ascending last_used: expired instances form a prefix
+                    cut = 0
+                    end = len(lst)
+                    while cut < end and t - lst[cut].last_used > ka:
+                        inst = lst[cut]
                         worker.idle_mem_mb -= inst.mem_mb
-                        self.sched.on_evict(worker.wid, self.funcs[func].name)
-                    else:
-                        keep.append(inst)
-                if keep:
-                    worker.idle[func] = keep
-                else:
-                    del worker.idle[func]
+                        self.sched.on_evict(worker.wid, self._fnames[func])
+                        cut += 1
+                    if cut:
+                        if cut == end:
+                            del worker.idle[func]
+                        else:
+                            worker.idle[func] = lst[cut:]
             self._drain_pending(worker)
-        self._push(self.t + cfg.sweep_every_s, "sweep")
+        self._push(self.t + cfg.sweep_every_s, _SWEEP)
 
     # ------------------------------------------------- elasticity / faults
     def _ev_fail(self, wid: int) -> None:
@@ -357,7 +486,7 @@ class Simulator:
         # running + pending tasks are lost; control plane retries them
         for task in worker.running + worker.pending:
             fresh = _Task(task.func, task.vu, task.ev_idx, task.t_submit)
-            self._push(self.t + self.cfg.retry_delay_s, "resubmit", (fresh,))
+            self._push(self.t + self.cfg.retry_delay_s, _RESUBMIT, (fresh,))
         worker.running, worker.pending, worker.idle = [], [], {}
         worker.busy_mem_mb = worker.idle_mem_mb = 0.0
         del self.workers[wid]

@@ -70,3 +70,20 @@ def sched_step(funcs, idle, conns, interpret: Optional[bool] = None):
     if padW:
         idle2, conns2 = idle2[:, :W], conns2[:W]
     return a, warm, idle2, conns2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sched_events(kinds, funcs, workers, idle, conns, interpret: Optional[bool] = None):
+    """Fused mixed (ARRIVAL|FINISH|EVICT) burst: pad lanes, run, unpad."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    F, W = idle.shape
+    padW = (-W) % 128 if not interpret else 0
+    if padW:
+        idle = jnp.pad(idle, ((0, 0), (0, padW)))
+        conns = jnp.pad(conns, (0, padW), constant_values=2**30)  # never selected
+    a, warm, idle2, conns2 = _ss.sched_events(
+        kinds, funcs, workers, idle, conns, interpret=interpret
+    )
+    if padW:
+        idle2, conns2 = idle2[:, :W], conns2[:W]
+    return a, warm, idle2, conns2

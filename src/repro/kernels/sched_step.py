@@ -1,4 +1,4 @@
-"""Fused pull-based scheduling step (Algorithm 1 ARRIVAL burst) in Pallas.
+"""Fused pull-based scheduling in Pallas: ARRIVAL bursts + mixed events.
 
 The paper's own hot path: for each request in a burst, (1) masked-argmin over
 workers with an idle instance of the requested function (the PQ_f dequeue),
@@ -6,6 +6,16 @@ workers with an idle instance of the requested function (the PQ_f dequeue),
 the *next* request in the burst observes.  The sequential dependence makes
 this a scan — fused here into one kernel invocation so the whole burst costs
 one dispatch (vs. one XLA scan iteration each; see benchmarks/bench_kernels).
+
+Two kernels:
+
+* ``sched_step``   — the original ARRIVAL-only burst.
+* ``sched_events`` — full mixed ``(ARRIVAL|FINISH|EVICT)`` event streams, the
+  fused form of ``core.jax_sched.sched_step`` scanned over a burst: FINISH
+  performs the pull enqueue (idle[f, w] += 1, connection closes), EVICT the
+  notification removal.  Bit-exact against ``sched_many(..., key=None)``
+  (deterministic lowest-index ties); exposed as
+  ``core.jax_sched.sched_many_fused`` with chunking + off-TPU fallback.
 
 Layout: workers live on the 128-lane axis (W padded to a lane multiple by
 ops.py, padding masked with +INF connections); the idle table rows for the
@@ -85,3 +95,96 @@ def sched_step(
         ],
         interpret=interpret,
     )(funcs, idle, conns)
+
+
+# --------------------------------------------------------------- mixed events
+def _sched_events_kernel(
+    kinds_ref, funcs_ref, workers_ref, idle_ref, conns_ref,
+    assign_ref, warm_ref, idle_out, conns_out,
+):
+    idle_out[...] = idle_ref[...]
+    conns_out[...] = conns_ref[...]
+    R = kinds_ref.shape[0]
+
+    def body(i, _):
+        k = kinds_ref[i]
+        f = funcs_ref[i]
+        w_ev = workers_ref[i]
+        w_ev = jnp.where(w_ev < 0, 0, w_ev)  # ARRIVAL carries -1: unused below
+        is_arr = (k == 0).astype(jnp.int32)
+        is_fin = (k == 1).astype(jnp.int32)
+        is_evt = (k == 2).astype(jnp.int32)
+
+        row = pl.load(idle_out, (pl.dslice(f, 1), slice(None)))[0]  # (W,)
+        conns = conns_out[...]
+        has_idle = jnp.any(row > 0)
+        pull_scores = jnp.where(row > 0, conns, _INF)
+        w_pull = jnp.argmin(pull_scores).astype(jnp.int32)
+        w_fb = jnp.argmin(conns).astype(jnp.int32)
+        w_assign = jnp.where(has_idle, w_pull, w_fb)
+
+        # ARRIVAL: dequeue from PQ_f (if pulled) + open connection
+        dec = is_arr * has_idle.astype(jnp.int32)
+        cell = pl.load(idle_out, (pl.dslice(f, 1), pl.dslice(w_assign, 1)))
+        pl.store(idle_out, (pl.dslice(f, 1), pl.dslice(w_assign, 1)), cell - dec)
+        c_cell = pl.load(conns_out, (pl.dslice(w_assign, 1),))
+        pl.store(conns_out, (pl.dslice(w_assign, 1),), c_cell + is_arr)
+
+        # FINISH: pull enqueue + close connection; EVICT: notification removal
+        cell = pl.load(idle_out, (pl.dslice(f, 1), pl.dslice(w_ev, 1)))
+        cell = cell + is_fin
+        cell = cell - is_evt * (cell > 0).astype(jnp.int32)
+        pl.store(idle_out, (pl.dslice(f, 1), pl.dslice(w_ev, 1)), cell)
+        c_cell = pl.load(conns_out, (pl.dslice(w_ev, 1),))
+        c_cell = c_cell - is_fin
+        c_cell = jnp.maximum(c_cell, 0)
+        pl.store(conns_out, (pl.dslice(w_ev, 1),), c_cell)
+
+        pl.store(assign_ref, (pl.dslice(i, 1),),
+                 jnp.where(is_arr == 1, w_assign, jnp.int32(-1))[None])
+        pl.store(warm_ref, (pl.dslice(i, 1),),
+                 (is_arr * has_idle.astype(jnp.int32))[None])
+        return 0
+
+    jax.lax.fori_loop(0, R, body, 0)
+
+
+def sched_events(
+    kinds: jax.Array,   # (R,) int32 — 0 ARRIVAL / 1 FINISH / 2 EVICT
+    funcs: jax.Array,   # (R,) int32
+    workers: jax.Array,  # (R,) int32 (-1 for ARRIVAL)
+    idle: jax.Array,    # (F, W) int32
+    conns: jax.Array,   # (W,) int32
+    interpret: bool = False,
+):
+    """Fused mixed-event burst.  Returns (assign, warm, idle', conns').
+
+    One dispatch per burst; semantics identical to scanning
+    ``core.jax_sched.sched_step`` with ``key=None`` (assign/warm are -1/0 for
+    non-ARRIVAL events).
+    """
+    R = kinds.shape[0]
+    F, W = idle.shape
+    return pl.pallas_call(
+        _sched_events_kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((F, W), lambda: (0, 0)),
+            pl.BlockSpec((W,), lambda: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((F, W), lambda: (0, 0)),
+            pl.BlockSpec((W,), lambda: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((F, W), jnp.int32),
+            jax.ShapeDtypeStruct((W,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(kinds, funcs, workers, idle, conns)

@@ -94,6 +94,8 @@ def run_cell(arch: str, shape: str, mesh, mesh_name: str, plan=None, remat=True,
             if v is not None:
                 mem_d[k] = int(v)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax returns one dict per device
+        cost = cost[0] if cost else {}
     cost_d = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float)) and not k.startswith("utilization")}
 
     hlo = compiled.as_text()

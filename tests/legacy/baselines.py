@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import bisect
 import hashlib
-import math
 from typing import List, Tuple
 
 from .scheduler import Scheduler, register
@@ -102,8 +101,9 @@ class _BoundedLoadMixin:
     threshold: float
 
     def _capacity(self) -> float:
-        # total_conns == sum(conns over live workers); +1 incl. the new req
-        total = self.total_conns + 1
+        total = sum(self.conns[w] for w in self.workers) + 1  # incl. new req
+        import math
+
         return math.ceil(self.threshold * total / max(1, len(self.workers)))
 
     def _overloaded(self, worker: int, cap: float) -> bool:

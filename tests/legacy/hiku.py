@@ -1,0 +1,91 @@
+"""Hiku: pull-based scheduling (Algorithm 1 of the paper).
+
+Key idea: decouple worker selection from task assignment.  After a worker
+finishes executing a function of type ``f`` it *proactively enqueues itself*
+in the idle priority queue ``PQ_f`` (the pull mechanism).  An incoming request
+for ``f`` dequeues the least-loaded enqueued worker — a guaranteed-warm
+assignment.  If ``PQ_f`` is empty the fallback mechanism (least connections,
+random tie-break) assigns the request.
+
+``PQ_f`` is *sorted by the number of active connections* (Algorithm 1, note at
+l.21).  Because connection counts change continuously, we store queue
+membership as a multiset and resolve the minimum at dequeue time — equivalent
+to keeping the queue re-sorted, and identical to what the paper's Go
+implementation achieves with its sorted container.  A worker appears once per
+idle instance it has enqueued (it may appear in several queues, and several
+times in one queue).  ``on_evict`` removes *the first occurrence* of the
+worker (Algorithm 1 l.17-20).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+from .scheduler import Scheduler, register
+
+
+@register("hiku")
+class HikuScheduler(Scheduler):
+    """Pull-based scheduler (the paper's contribution)."""
+
+    def __init__(self, n_workers: int, seed: int = 0, fallback: str = "least_connections"):
+        super().__init__(n_workers, seed)
+        # PQ_f as multiset: func -> list of worker ids (one entry per enqueued
+        # idle instance).  Min-load resolution happens at dequeue.
+        self.idle_queues: Dict[str, List[int]] = defaultdict(list)
+        self.fallback = fallback
+        # telemetry
+        self.pull_hits = 0
+        self.fallback_assigns = 0
+
+    # ------------------------------------------------------------ schedule
+    def select(self, func: str) -> int:
+        pq = self.idle_queues.get(func)
+        if pq:
+            # Pull mechanism: dequeue least-loaded enqueued worker.
+            w = self._dequeue_min(pq)
+            self.pull_hits += 1
+            return w
+        # Fallback mechanism (least connections, random tie-break).
+        self.fallback_assigns += 1
+        if self.fallback == "random":
+            return self.rng.choice(self.workers)
+        return self._least_connections()
+
+    def _dequeue_min(self, pq: List[int]) -> int:
+        # priority = (active connections, worker id): deterministic tie-break
+        # by lowest id keeps this object semantically identical to the array
+        # formulation in jax_sched.py (tie order is unspecified in the paper).
+        lmin = min((self.conns.get(w, 0), w) for w in pq)
+        pq.remove(lmin[1])
+        return lmin[1]
+
+    # ------------------------------------------------------------ callbacks
+    def on_finish(self, worker: int, func: str) -> None:
+        super().on_finish(worker, func)
+        # Pull: worker signals readiness for another request of this type.
+        if worker in self.conns:  # ignore signals from removed workers
+            self.idle_queues[func].append(worker)
+
+    def on_evict(self, worker: int, func: str) -> None:
+        # Notification mechanism: drop first occurrence of worker from PQ_f.
+        pq = self.idle_queues.get(func)
+        if pq:
+            try:
+                pq.remove(worker)
+            except ValueError:
+                pass
+
+    def on_worker_removed(self, worker: int) -> None:
+        super().on_worker_removed(worker)
+        # Failure/scale-down: purge every queue entry of the worker.
+        for pq in self.idle_queues.values():
+            while worker in pq:
+                pq.remove(worker)
+
+    # ------------------------------------------------------------ telemetry
+    def queue_depth(self, func: Optional[str] = None) -> int:
+        if func is not None:
+            return len(self.idle_queues.get(func, ()))
+        return sum(len(q) for q in self.idle_queues.values())

@@ -22,8 +22,6 @@ import abc
 import random
 from typing import Callable, Dict, List, Optional
 
-import numpy as np
-
 
 class Scheduler(abc.ABC):
     """Base class; concrete schedulers implement ``select``."""
@@ -35,19 +33,7 @@ class Scheduler(abc.ABC):
         self.workers: List[int] = list(range(n_workers))
         self.rng = random.Random(seed)
         # Scheduler-view active connections per worker (LC fallback et al.).
-        # Managed via the callbacks; total_conns mirrors the sum over live
-        # workers so bounded-load baselines avoid an O(workers) sum per
-        # request.
         self.conns: Dict[int, int] = {w: 0 for w in self.workers}
-        self.total_conns = 0
-        # Dense mirror of ``conns`` for the least-connections scan: C-speed
-        # argmin over 100s of workers instead of a Python listcomp.  Only
-        # valid while worker ids are ascending (so id order == workers-list
-        # order and the tie set comes out in the seed engine's order);
-        # otherwise _least_connections falls back to the exact scan.
-        self._conns_arr = np.zeros(max(n_workers, 1), np.int64)
-        self._live_ids: Optional[np.ndarray] = None  # rebuilt lazily
-        self._ids_ascending = True
 
     # ------------------------------------------------------------------ API
     @abc.abstractmethod
@@ -61,28 +47,10 @@ class Scheduler(abc.ABC):
 
     # ------------------------------------------------------------ callbacks
     def on_assign(self, worker: int, func: str) -> None:
-        new = self.conns.get(worker, 0) + 1
-        self.conns[worker] = new
-        self.total_conns += 1
-        if worker < len(self._conns_arr):
-            self._conns_arr[worker] = new
-
-    def _release(self, worker: int) -> int:
-        """Clamped connection decrement + total/dense-mirror bookkeeping.
-
-        Shared by on_finish/on_cancel (HikuScheduler.on_finish inlines the
-        same sequence for hot-path speed — keep them in sync).
-        """
-        old = self.conns.get(worker, 0)
-        new = old - 1 if old > 0 else 0
-        self.conns[worker] = new
-        self.total_conns += new - old
-        if worker < len(self._conns_arr):
-            self._conns_arr[worker] = new
-        return new
+        self.conns[worker] = self.conns.get(worker, 0) + 1
 
     def on_finish(self, worker: int, func: str) -> None:
-        self._release(worker)
+        self.conns[worker] = max(0, self.conns.get(worker, 0) - 1)
 
     def on_cancel(self, worker: int, func: str) -> None:
         """Undo an assignment that never executed (failure race).
@@ -90,53 +58,29 @@ class Scheduler(abc.ABC):
         Unlike ``on_finish`` this must NOT signal idle capacity (no pull
         enqueue in Hiku) — it only releases the connection count.
         """
-        self._release(worker)
+        self.conns[worker] = max(0, self.conns.get(worker, 0) - 1)
 
     def on_evict(self, worker: int, func: str) -> None:  # noqa: B027
         """Sandbox-destruction notification; default: ignored."""
 
     def on_worker_added(self, worker: int) -> None:
         if worker not in self.conns:
-            if self.workers and worker < self.workers[-1]:
-                self._ids_ascending = False  # id order != list order
             self.workers.append(worker)
             self.conns[worker] = 0
             self.n_workers = len(self.workers)
-            if worker >= len(self._conns_arr):
-                grown = np.zeros(max(worker + 1, 2 * len(self._conns_arr)), np.int64)
-                grown[: len(self._conns_arr)] = self._conns_arr
-                self._conns_arr = grown
-            self._conns_arr[worker] = 0
-            self._live_ids = None
 
     def on_worker_removed(self, worker: int) -> None:
         if worker in self.conns:
             self.workers.remove(worker)
-            self.total_conns -= self.conns.pop(worker)
+            del self.conns[worker]
             self.n_workers = len(self.workers)
-            self._live_ids = None
 
     # ------------------------------------------------------------- helpers
     def _least_connections(self) -> int:
-        """Least-connections with random tie-breaking (Algorithm 1 l.8-10).
-
-        Vectorized over the dense conns mirror; the tie set, its order (the
-        ascending workers list) and the single ``rng.choice`` consumption are
-        identical to a full Python scan, which remains as the fallback for
-        non-ascending worker ids.
-        """
-        if not self._ids_ascending:
-            conns = self.conns
-            cs = [conns[w] for w in self.workers]
-            lmin = min(cs)
-            tied = [w for w, c in zip(self.workers, cs) if c == lmin]
-            return self.rng.choice(tied)
-        ids = self._live_ids
-        if ids is None:
-            ids = self._live_ids = np.array(self.workers, np.int64)
-        sub = self._conns_arr[ids]
-        tied = ids[sub == sub.min()]
-        return int(self.rng.choice(tied))
+        """Least-connections with random tie-breaking (Algorithm 1 l.8-10)."""
+        lmin = min(self.conns[w] for w in self.workers)
+        tied = [w for w in self.workers if self.conns[w] == lmin]
+        return self.rng.choice(tied)
 
 
 # Registry -----------------------------------------------------------------

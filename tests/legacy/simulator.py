@@ -1,0 +1,371 @@
+"""Discrete-event simulator of a FaaS cluster (reproduces the paper's §V).
+
+Models the OpenLambda deployment of the paper: ``n_workers`` workers, each a
+processor-sharing server with ``cores`` vCPUs and a finite sandbox memory
+pool, a keep-alive evictor (Figure 2 lifecycle), and closed-loop virtual
+users (k6) replaying seeded programs.  Any ``core.Scheduler`` plugs in; the
+simulator feeds it the assign/finish/evict callbacks the real control plane
+would.
+
+Fidelity notes (recorded per DESIGN.md §2):
+* scheduler<->worker notification latency is 0 (LAN RTT in the paper, ~µs);
+* each sandbox executes one request at a time (OpenLambda semantics);
+* cold start = instance initialization work added to the task (Table I
+  cold-warm delta), executed under processor sharing like the paper's VMs;
+* per-request service fluctuation is seeded by request identity so every
+  scheduler replays identical stochastic demand (paper's fairness device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .scheduler import Scheduler
+from .trace import FunctionSpec, VUProgram, make_functions, make_vu_programs
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_workers: int = 5
+    cores_per_worker: float = 4.0
+    # pool/keep-alive calibrated so the §V protocol lands at the paper's
+    # operating point (hiku lowest cold rate ~20-30%, baselines 33-60%;
+    # see EXPERIMENTS.md §Reproduction for the calibration sweep)
+    mem_pool_mb: float = 2048.0
+    keep_alive_s: float = 45.0
+    sweep_every_s: float = 1.0
+    exec_sigma: float = 0.25
+    overhead_ms: float = 0.0  # scheduler decision overhead added to latency
+    retry_delay_s: float = 0.05  # resubmit delay after worker failure
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    t_submit: float
+    t_complete: float
+    func: int
+    worker: int
+    cold: bool
+    vu: int
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_complete - self.t_submit) * 1e3
+
+
+class _Instance:
+    __slots__ = ("func", "mem_mb", "last_used")
+
+    def __init__(self, func: int, mem_mb: float, t: float):
+        self.func = func
+        self.mem_mb = mem_mb
+        self.last_used = t
+
+
+class _Task:
+    __slots__ = ("func", "vu", "ev_idx", "t_submit", "work_s", "remaining_s", "cold", "worker")
+
+    def __init__(self, func: int, vu: int, ev_idx: int, t_submit: float):
+        self.func = func
+        self.vu = vu
+        self.ev_idx = ev_idx
+        self.t_submit = t_submit
+        self.work_s = 0.0
+        self.remaining_s = 0.0
+        self.cold = False
+        self.worker = -1
+
+
+class _Worker:
+    """Processor-sharing server with a sandbox memory pool."""
+
+    def __init__(self, wid: int, cfg: SimConfig):
+        self.wid = wid
+        self.cores = cfg.cores_per_worker
+        self.pool_mb = cfg.mem_pool_mb
+        self.running: List[_Task] = []
+        self.idle: Dict[int, List[_Instance]] = {}  # func -> idle instances
+        self.busy_mem_mb = 0.0
+        self.idle_mem_mb = 0.0
+        self.pending: List[_Task] = []  # waiting for memory
+        self.last_t = 0.0
+        self.version = 0  # invalidates stale completion events
+        self.alive = True
+
+    # ---------------------------------------------------------------- PS
+    def rate(self) -> float:
+        n = len(self.running)
+        return 1.0 if n == 0 else min(1.0, self.cores / n)
+
+    def advance(self, t: float) -> None:
+        dt = t - self.last_t
+        if dt > 0 and self.running:
+            r = self.rate()
+            for task in self.running:
+                task.remaining_s -= dt * r
+        self.last_t = t
+
+    def next_completion(self, t: float) -> Optional[float]:
+        if not self.running:
+            return None
+        r = self.rate()
+        min_rem = min(task.remaining_s for task in self.running)
+        return t + max(0.0, min_rem) / r
+
+    # ------------------------------------------------------------- memory
+    def mem_usage(self) -> float:
+        return self.busy_mem_mb + self.idle_mem_mb
+
+    def has_idle(self, func: int) -> bool:
+        return bool(self.idle.get(func))
+
+    def pop_idle(self, func: int) -> _Instance:
+        inst = self.idle[func].pop()
+        if not self.idle[func]:
+            del self.idle[func]
+        self.idle_mem_mb -= inst.mem_mb
+        return inst
+
+    def push_idle(self, inst: _Instance, t: float) -> None:
+        inst.last_used = t
+        self.idle.setdefault(inst.func, []).append(inst)
+        self.idle_mem_mb += inst.mem_mb
+
+    def evict_lru(self) -> Optional[_Instance]:
+        """Evict the least-recently-used idle instance (force eviction)."""
+        best: Optional[Tuple[int, int]] = None
+        for func, lst in self.idle.items():
+            for i, inst in enumerate(lst):
+                if best is None or inst.last_used < self.idle[best[0]][best[1]].last_used:
+                    best = (func, i)
+        if best is None:
+            return None
+        func, i = best
+        inst = self.idle[func].pop(i)
+        if not self.idle[func]:
+            del self.idle[func]
+        self.idle_mem_mb -= inst.mem_mb
+        return inst
+
+
+class Simulator:
+    """Event-driven FaaS cluster; ``run()`` returns request records + stats."""
+
+    def __init__(
+        self,
+        scheduler: Scheduler,
+        funcs: Optional[Sequence[FunctionSpec]] = None,
+        cfg: Optional[SimConfig] = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg or SimConfig()
+        self.sched = scheduler
+        self.funcs = list(funcs) if funcs is not None else make_functions(seed=seed)
+        self.seed = seed
+        self.workers = {w: _Worker(w, self.cfg) for w in range(self.cfg.n_workers)}
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self.t = 0.0
+        self.records: List[RequestRecord] = []
+        self.assignments: List[Tuple[float, int]] = []  # (t, worker)
+        self._failures: List[Tuple[float, int]] = []
+        self._additions: List[Tuple[float, int]] = []
+
+    # ------------------------------------------------------------- events
+    def _push(self, t: float, kind: str, payload: tuple = ()) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def inject_failure(self, t: float, worker: int) -> None:
+        self._failures.append((t, worker))
+
+    def inject_worker(self, t: float, worker: int) -> None:
+        self._additions.append((t, worker))
+
+    # --------------------------------------------------------------- run
+    def run(
+        self,
+        n_vus: int = 20,
+        duration_s: float = 100.0,
+        programs: Optional[List[VUProgram]] = None,
+        t_start: float = 0.0,
+    ) -> List[RequestRecord]:
+        cfg = self.cfg
+        if programs is None:
+            # generous upper bound on events per VU
+            n_events = int(duration_s * 4) + 16
+            programs = make_vu_programs(self.funcs, n_vus, n_events, self.seed)
+        self._programs = programs
+        self._vu_pos = [0] * n_vus
+        self._deadline = t_start + duration_s
+
+        for vu in range(n_vus):
+            self._push(t_start, "submit", (vu,))
+        self._push(t_start + cfg.sweep_every_s, "sweep")
+        for t, w in self._failures:
+            self._push(t, "fail", (w,))
+        for t, w in self._additions:
+            self._push(t, "add_worker", (w,))
+
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t > self._deadline:
+                break
+            self.t = t
+            getattr(self, f"_ev_{kind}")(*payload)
+        return self.records
+
+    # ------------------------------------------------------------ handlers
+    def _ev_submit(self, vu: int) -> None:
+        prog = self._programs[vu]
+        pos = self._vu_pos[vu]
+        if pos >= len(prog.func_idx) or self.t > self._deadline:
+            return
+        self._vu_pos[vu] = pos + 1
+        func = int(prog.func_idx[pos])
+        task = _Task(func, vu, pos, self.t)
+        self._dispatch(task)
+
+    def _dispatch(self, task: _Task) -> None:
+        fname = self.funcs[task.func].name
+        w = self.sched.schedule(fname)
+        if w not in self.workers or not self.workers[w].alive:
+            # scheduler view raced with a failure; retry shortly
+            self.sched.on_cancel(w, fname)
+            self._push(self.t + self.cfg.retry_delay_s, "resubmit", (task,))
+            return
+        task.worker = w
+        self.assignments.append((self.t, w))
+        self._start_or_queue(self.workers[w], task)
+
+    def _ev_resubmit(self, task: _Task) -> None:
+        self._dispatch(task)
+
+    def _start_or_queue(self, worker: _Worker, task: _Task) -> None:
+        worker.advance(self.t)
+        spec = self.funcs[task.func]
+        if worker.has_idle(task.func):
+            inst = worker.pop_idle(task.func)
+            worker.busy_mem_mb += inst.mem_mb
+            task.cold = False
+        else:
+            # cold path: make room for a new sandbox
+            while worker.mem_usage() + spec.mem_mb > worker.pool_mb:
+                evicted = worker.evict_lru()
+                if evicted is None:
+                    break
+                self.sched.on_evict(worker.wid, self.funcs[evicted.func].name)
+            if worker.mem_usage() + spec.mem_mb > worker.pool_mb:
+                worker.pending.append(task)  # waits for memory
+                return
+            worker.busy_mem_mb += spec.mem_mb
+            task.cold = True
+        task.work_s = self._service_s(task)
+        task.remaining_s = task.work_s
+        worker.running.append(task)
+        self._reschedule(worker)
+
+    def _service_s(self, task: _Task) -> float:
+        spec = self.funcs[task.func]
+        rng = np.random.default_rng((self.seed, task.vu, task.ev_idx))
+        sigma = self.cfg.exec_sigma
+        fluct = rng.lognormal(mean=-0.5 * sigma**2, sigma=sigma)
+        base_ms = spec.cold_ms if task.cold else spec.warm_ms
+        return base_ms * fluct / 1e3
+
+    def _reschedule(self, worker: _Worker) -> None:
+        worker.version += 1
+        nxt = worker.next_completion(self.t)
+        if nxt is not None:
+            self._push(nxt, "complete", (worker.wid, worker.version))
+
+    def _ev_complete(self, wid: int, version: int) -> None:
+        worker = self.workers.get(wid)
+        if worker is None or version != worker.version or not worker.alive:
+            return
+        worker.advance(self.t)
+        done = [task for task in worker.running if task.remaining_s <= 1e-12]
+        worker.running = [task for task in worker.running if task.remaining_s > 1e-12]
+        for task in done:
+            self._complete(worker, task)
+        # pending tasks may now fit (an instance went idle and can be evicted)
+        self._drain_pending(worker)
+        self._reschedule(worker)
+
+    def _complete(self, worker: _Worker, task: _Task) -> None:
+        spec = self.funcs[task.func]
+        worker.busy_mem_mb -= spec.mem_mb
+        worker.push_idle(_Instance(task.func, spec.mem_mb, self.t), self.t)
+        self.sched.on_finish(worker.wid, spec.name)
+        t_done = self.t + self.cfg.overhead_ms / 1e3
+        self.records.append(
+            RequestRecord(task.t_submit, t_done, task.func, worker.wid, task.cold, task.vu)
+        )
+        # closed loop: VU thinks, then submits its next request
+        prog = self._programs[task.vu]
+        sleep = float(prog.sleep_s[min(task.ev_idx, len(prog.sleep_s) - 1)])
+        self._push(t_done + sleep, "submit", (task.vu,))
+
+    def _drain_pending(self, worker: _Worker) -> None:
+        if not worker.pending:
+            return
+        waiting, worker.pending = worker.pending, []  # _start_or_queue may re-append
+        for task in waiting:
+            spec = self.funcs[task.func]
+            if (
+                worker.has_idle(task.func)
+                or worker.mem_usage() + spec.mem_mb <= worker.pool_mb
+                or worker.idle_mem_mb > 0
+            ):
+                self._start_or_queue(worker, task)
+            else:
+                worker.pending.append(task)
+
+    def _ev_sweep(self) -> None:
+        cfg = self.cfg
+        for worker in self.workers.values():
+            if not worker.alive:
+                continue
+            worker.advance(self.t)
+            for func in list(worker.idle):
+                keep = []
+                for inst in worker.idle[func]:
+                    if self.t - inst.last_used > cfg.keep_alive_s:
+                        worker.idle_mem_mb -= inst.mem_mb
+                        self.sched.on_evict(worker.wid, self.funcs[func].name)
+                    else:
+                        keep.append(inst)
+                if keep:
+                    worker.idle[func] = keep
+                else:
+                    del worker.idle[func]
+            self._drain_pending(worker)
+        self._push(self.t + cfg.sweep_every_s, "sweep")
+
+    # ------------------------------------------------- elasticity / faults
+    def _ev_fail(self, wid: int) -> None:
+        worker = self.workers.get(wid)
+        if worker is None or not worker.alive:
+            return
+        worker.advance(self.t)
+        worker.alive = False
+        self.sched.on_worker_removed(wid)
+        # running + pending tasks are lost; control plane retries them
+        for task in worker.running + worker.pending:
+            fresh = _Task(task.func, task.vu, task.ev_idx, task.t_submit)
+            self._push(self.t + self.cfg.retry_delay_s, "resubmit", (fresh,))
+        worker.running, worker.pending, worker.idle = [], [], {}
+        worker.busy_mem_mb = worker.idle_mem_mb = 0.0
+        del self.workers[wid]
+
+    def _ev_add_worker(self, wid: int) -> None:
+        if wid in self.workers:
+            return
+        w = _Worker(wid, self.cfg)
+        w.last_t = self.t
+        self.workers[wid] = w
+        self.sched.on_worker_added(wid)

@@ -153,9 +153,6 @@ class VUProgram:
     sleep_s: np.ndarray  # (n_events,)
 
 
-_PROG_CACHE: Dict[tuple, List["VUProgram"]] = {}
-
-
 def make_vu_programs(
     funcs: Sequence[FunctionSpec],
     n_vus: int,
@@ -164,13 +161,6 @@ def make_vu_programs(
     think_lo: float = 0.1,
     think_hi: float = 1.0,
 ) -> List[VUProgram]:
-    # Programs are a pure function of (weights, shape, seed): memoize so the
-    # benchmark matrix generates each seeded workload once, not once per
-    # scheduler.  Returned lists are shared read-only.
-    key = (tuple(f.weight for f in funcs), n_vus, n_events, seed, think_lo, think_hi)
-    cached = _PROG_CACHE.get(key)
-    if cached is not None:
-        return cached
     weights = np.array([f.weight for f in funcs])
     weights = weights / weights.sum()
     programs = []
@@ -179,9 +169,6 @@ def make_vu_programs(
         idx = rng.choice(len(funcs), size=n_events, p=weights)
         sleep = rng.uniform(think_lo, think_hi, size=n_events)
         programs.append(VUProgram(idx, sleep))
-    if len(_PROG_CACHE) >= 16:
-        _PROG_CACHE.clear()
-    _PROG_CACHE[key] = programs
     return programs
 
 
@@ -189,23 +176,6 @@ def service_time_ms(spec: FunctionSpec, cold: bool, rng: np.random.Generator, si
     """Lognormal fluctuation around Table-I base latency (Figure 5)."""
     base = spec.cold_ms if cold else spec.warm_ms
     return float(base * rng.lognormal(mean=-0.5 * sigma**2, sigma=sigma))
-
-
-def service_fluctuations(
-    seed: int, n_vus: int, n_events: int, sigma: float, ev_start: int = 0
-) -> np.ndarray:
-    """Pre-generated per-request service-time fluctuation band.
-
-    Entry ``[vu, j]`` is bit-identical to what the seed simulator drew
-    per-request: ``default_rng((seed, vu, ev_start + j)).lognormal(-σ²/2, σ)``
-    — the request-identity seeding that lets every scheduler replay the same
-    stochastic demand.  Computed vectorized (see ``fastrng``) so programs can
-    carry their fluctuations instead of paying a Generator construction per
-    request in the simulator hot loop.
-    """
-    from .fastrng import lognormal_matrix
-
-    return lognormal_matrix(seed, n_vus, n_events, -0.5 * sigma**2, sigma, ev_start=ev_start)
 
 
 # ------------------------------------------------------------------ Figure 6

@@ -1,0 +1,88 @@
+"""Benchmark harness smoke test: ``benchmarks/run.py --quick`` must run every
+module without ERROR rows (so bench modules can't silently bit-rot)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_benchmarks_run_quick_smoke():
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick"],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={**__import__("os").environ, "PYTHONPATH": str(ROOT / "src")},
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    lines = [l for l in out.stdout.splitlines() if l.strip()]
+    assert lines and lines[0] == "name,us_per_call,derived"
+    errors = [l for l in lines if "/ERROR," in l]
+    assert not errors, f"benchmark modules failed: {errors}"
+    # every registered module must have reported a wall-time row
+    walls = {l.split(",")[0].split("/")[1] for l in lines if l.startswith("_bench_wall/")}
+    expected = {"table1", "trace", "latency", "coldstart", "imbalance", "throughput",
+                "concurrency", "overhead", "kernels", "pull_dispatch", "sim_speed"}
+    assert expected <= walls, f"missing modules: {expected - walls}"
+
+
+@pytest.mark.slow
+def test_sim_speed_bench_reports_10x_at_scale():
+    """Acceptance: >=10x events/sec over the checked-in seed baseline at the
+    production-scale anchor configs.
+
+    The checked-in baseline is an absolute same-machine measurement, so on
+    much slower hardware this assertion is about the *reported* ratio; the
+    hardware-independent regression pin is the live legacy-vs-new test below.
+    """
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks import bench_sim_speed
+    finally:
+        sys.path.pop(0)
+    rows = bench_sim_speed.run(quick=False)
+    speedups = {}
+    for name, _, derived in rows:
+        if "speedup=" in str(derived):
+            speedups[name] = float(str(derived).split("speedup=")[1].rstrip("x"))
+    scale_anchors = [v for k, v in speedups.items() if k.endswith("_8g")]
+    assert scale_anchors, f"no scale anchors in {speedups}"
+    assert max(scale_anchors) >= 10.0, f"speedups below acceptance: {speedups}"
+
+
+@pytest.mark.slow
+def test_engine_speedup_live_vs_frozen_seed():
+    """Hardware-independent acceptance backstop: time the frozen seed engine
+    (tests/legacy) and the refactored engine live, same process, same config
+    (a reduced-duration variant of the 800w/8G scale anchor)."""
+    import gc
+    import time
+
+    from legacy import SimConfig as LegacyCfg
+    from legacy import Simulator as LegacySim
+    from legacy import make_scheduler as legacy_make
+    from repro.core import SimConfig, Simulator, make_scheduler
+
+    nw, vus, dur, mem = 800, 8000, 4.0, 8192.0
+
+    def timed(mk, Sim, Cfg):
+        gc.collect()
+        sched = mk("hiku", nw, seed=0)
+        sim = Sim(sched, cfg=Cfg(n_workers=nw, mem_pool_mb=mem), seed=0)
+        t0 = time.perf_counter()
+        recs = sim.run(n_vus=vus, duration_s=dur)
+        return len(recs), time.perf_counter() - t0
+
+    n_new, wall_new = timed(make_scheduler, Simulator, SimConfig)
+    n_old, wall_old = timed(legacy_make, LegacySim, LegacyCfg)
+    assert n_new == n_old  # same workload replayed
+    ratio = wall_old / wall_new
+    # full-duration anchors measure ~12-18x; 6x here leaves noise headroom
+    # while still catching any order-of-magnitude regression
+    assert ratio >= 6.0, f"live speedup collapsed: {ratio:.1f}x ({wall_old:.1f}s vs {wall_new:.1f}s)"

@@ -1,0 +1,74 @@
+"""fastrng: the vectorized service-time RNG must be bit-identical to
+per-tuple ``np.random.default_rng((seed, vu, ev)).lognormal(...)``."""
+
+import numpy as np
+import pytest
+
+from repro.core import fastrng
+
+
+def _reference(seed, n_vus, n_events, mean, sigma):
+    return np.array(
+        [
+            [
+                np.random.default_rng((seed, v, e)).lognormal(mean=mean, sigma=sigma)
+                for e in range(n_events)
+            ]
+            for v in range(n_vus)
+        ]
+    )
+
+
+def test_selftest_passes():
+    assert fastrng.selftest()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 42, 999_999, 2**31])
+def test_bit_exact_vs_default_rng(seed):
+    mean, sigma = -0.5 * 0.25**2, 0.25
+    got = fastrng.lognormal_matrix(seed, 8, 64, mean, sigma)
+    want = _reference(seed, 8, 64, mean, sigma)
+    assert np.array_equal(got, want)
+
+
+def test_bit_exact_other_sigma():
+    got = fastrng.lognormal_matrix(7, 4, 32, -0.08, 0.4)
+    want = _reference(7, 4, 32, -0.08, 0.4)
+    assert np.array_equal(got, want)
+
+
+def test_ev_start_band():
+    mean, sigma = -0.03125, 0.25
+    full = fastrng.lognormal_matrix(3, 4, 48, mean, sigma)
+    band = fastrng.lognormal_matrix(3, 4, 16, mean, sigma, ev_start=32)
+    assert np.array_equal(full[:, 32:48], band)
+
+
+def test_out_of_range_seed_falls_back():
+    # >=2**32 entropy uses a multi-word mix schedule: must take the slow path
+    seed = 2**33 + 5
+    got = fastrng.lognormal_matrix(seed, 2, 8, -0.03125, 0.25)
+    want = _reference(seed, 2, 8, -0.03125, 0.25)
+    assert np.array_equal(got, want)
+
+
+def test_state_reset_fallback_matches_fresh_generator():
+    """The cheap PCG64 state-reset fallback must replay the full stream."""
+    vu = np.arange(50, dtype=np.uint32)
+    ev = np.full(50, 3, np.uint32)
+    sh, sl, inch, incl = fastrng._init_state(77, vu, ev)
+    for i in range(50):
+        state = (int(sh[i]) << 64) | int(sl[i])
+        inc = (int(inch[i]) << 64) | int(incl[i])
+        got = fastrng._slow_from_state(state, inc, -0.03125, 0.25)
+        want = float(np.random.default_rng((77, int(vu[i]), 3)).lognormal(-0.03125, 0.25))
+        assert got == want
+
+
+@pytest.mark.slow
+def test_bit_exact_large_sample():
+    """Broad sweep: ~20k draws covering all ziggurat strips + rejection paths."""
+    mean, sigma = -0.5 * 0.25**2, 0.25
+    got = fastrng.lognormal_matrix(1234, 20, 1000, mean, sigma)
+    want = _reference(1234, 20, 1000, mean, sigma)
+    assert np.array_equal(got, want)

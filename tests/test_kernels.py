@@ -1,13 +1,12 @@
 """Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret mode executes the kernel bodies on CPU), plus hypothesis property
-tests on the scheduler kernel's invariants."""
+(interpret mode executes the kernel bodies on CPU).  Hypothesis property
+tests live in test_kernels_properties.py so this module runs even where
+hypothesis isn't installed."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.kernels import ops, ref
 
@@ -120,6 +119,38 @@ def test_ssd_scan_state_carry_equals_two_halves():
     np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2), atol=1e-4, rtol=1e-3)
 
 
+# ------------------------------------------------- fused mixed-event dispatch
+@pytest.mark.parametrize("R,F,W", [(32, 4, 8), (100, 10, 16), (57, 3, 5), (128, 40, 130)])
+def test_sched_events_sweep(R, F, W):
+    """Fused (ARRIVAL|FINISH|EVICT) kernel == the jax_sched scan oracle."""
+    rng = np.random.default_rng(R * 1000 + W)
+    kinds = rng.integers(0, 3, R)
+    funcs = rng.integers(0, F, R)
+    workers = np.where(kinds == 0, -1, rng.integers(0, W, R))
+    idle = rng.integers(0, 3, (F, W))
+    conns = rng.integers(0, 5, W)
+    args = [jnp.asarray(a, jnp.int32) for a in (kinds, funcs, workers, idle, conns)]
+    a, warm, i2, c2 = ops.sched_events(*args)
+    ar, wr, ir, cr = ref.sched_events_ref(*args)
+    assert jnp.all(a == ar) and jnp.all(warm == wr)
+    assert jnp.all(i2 == ir) and jnp.all(c2 == cr)
+
+
+def test_sched_events_arrival_only_matches_sched_step():
+    """On a pure ARRIVAL burst the mixed kernel degenerates to sched_step."""
+    ks = jax.random.split(jax.random.key(9), 3)
+    R, F, W = 48, 6, 8
+    funcs = jax.random.randint(ks[0], (R,), 0, F)
+    idle = jax.random.randint(ks[1], (F, W), 0, 3)
+    conns = jax.random.randint(ks[2], (W,), 0, 5)
+    kinds = jnp.zeros((R,), jnp.int32)
+    workers = jnp.full((R,), -1, jnp.int32)
+    a1, w1, i1, c1 = ops.sched_events(kinds, funcs, workers, idle, conns)
+    a2, w2, i2, c2 = ops.sched_step(funcs, idle, conns)
+    assert jnp.all(a1 == a2) and jnp.all(w1 == w2)
+    assert jnp.all(i1 == i2) and jnp.all(c1 == c2)
+
+
 # ------------------------------------------------------------- scheduler step
 @pytest.mark.parametrize("R,F,W", [(16, 4, 8), (64, 10, 16), (8, 1, 4), (128, 40, 5)])
 def test_sched_step_sweep(R, F, W):
@@ -131,43 +162,3 @@ def test_sched_step_sweep(R, F, W):
     ar, wr, ir, cr = ref.sched_step_ref(funcs, idle, conns)
     assert jnp.all(a == ar) and jnp.all(warm == wr.astype(jnp.int32))
     assert jnp.all(i2 == ir) and jnp.all(c2 == cr)
-
-
-@settings(max_examples=30, deadline=None)
-@given(
-    r=st.integers(1, 40),
-    f=st.integers(1, 8),
-    w=st.integers(1, 12),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_sched_step_invariants(r, f, w, seed):
-    """Property: conservation + warm-iff-idle-available (Algorithm 1)."""
-    ks = jax.random.split(jax.random.key(seed), 3)
-    funcs = jax.random.randint(ks[0], (r,), 0, f)
-    idle = jax.random.randint(ks[1], (f, w), 0, 3)
-    conns = jax.random.randint(ks[2], (w,), 0, 4)
-    a, warm, i2, c2 = ref.sched_step_ref(funcs, idle, conns)
-    a, warm, i2, c2 = map(np.asarray, (a, warm, i2, c2))
-    # every request assigned to a real worker
-    assert ((a >= 0) & (a < w)).all()
-    # connections increase by exactly R in total
-    assert c2.sum() == np.asarray(conns).sum() + r
-    # idle entries only ever decrease, by exactly the number of warm hits
-    assert (i2 <= np.asarray(idle)).all()
-    assert np.asarray(idle).sum() - i2.sum() == warm.sum()
-    # a request is warm iff its function had an idle instance at its turn
-    # (checked constructively by replay)
-    idle_sim = np.asarray(idle).copy()
-    conns_sim = np.asarray(conns).copy()
-    for i in range(r):
-        fi = int(funcs[i])
-        has = idle_sim[fi].sum() > 0
-        assert bool(warm[i]) == bool(has)
-        if has:
-            row = np.where(idle_sim[fi] > 0, conns_sim, 2**30)
-            wi = int(row.argmin())
-            idle_sim[fi, wi] -= 1
-        else:
-            wi = int(conns_sim.argmin())
-        assert wi == int(a[i])
-        conns_sim[wi] += 1

@@ -1,0 +1,54 @@
+"""Hypothesis property tests on the scheduler kernel's invariants.
+
+Kept separate from test_kernels.py so the deterministic kernel sweeps still
+run on environments without hypothesis (this module is skipped there)."""
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip only the property tests
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.kernels import ref  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    r=st.integers(1, 40),
+    f=st.integers(1, 8),
+    w=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sched_step_invariants(r, f, w, seed):
+    """Property: conservation + warm-iff-idle-available (Algorithm 1)."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    funcs = jax.random.randint(ks[0], (r,), 0, f)
+    idle = jax.random.randint(ks[1], (f, w), 0, 3)
+    conns = jax.random.randint(ks[2], (w,), 0, 4)
+    a, warm, i2, c2 = ref.sched_step_ref(funcs, idle, conns)
+    a, warm, i2, c2 = map(np.asarray, (a, warm, i2, c2))
+    # every request assigned to a real worker
+    assert ((a >= 0) & (a < w)).all()
+    # connections increase by exactly R in total
+    assert c2.sum() == np.asarray(conns).sum() + r
+    # idle entries only ever decrease, by exactly the number of warm hits
+    assert (i2 <= np.asarray(idle)).all()
+    assert np.asarray(idle).sum() - i2.sum() == warm.sum()
+    # a request is warm iff its function had an idle instance at its turn
+    # (checked constructively by replay)
+    idle_sim = np.asarray(idle).copy()
+    conns_sim = np.asarray(conns).copy()
+    for i in range(r):
+        fi = int(funcs[i])
+        has = idle_sim[fi].sum() > 0
+        assert bool(warm[i]) == bool(has)
+        if has:
+            row = np.where(idle_sim[fi] > 0, conns_sim, 2**30)
+            wi = int(row.argmin())
+            idle_sim[fi, wi] -= 1
+        else:
+            wi = int(conns_sim.argmin())
+        assert wi == int(a[i])
+        conns_sim[wi] += 1

@@ -1,0 +1,72 @@
+"""Scale smoke tests: the simulator + Hiku at 100 workers / 500 VUs.
+
+The hot-path refactor exists to make this class of run routine; these tests
+pin the structural invariants (scheduler-view consistency, queue bookkeeping
+through worker removal, worker memory accounting) at that scale."""
+
+import pytest
+
+from repro.core import SimConfig, Simulator, make_scheduler
+
+
+@pytest.fixture(scope="module")
+def scale_run():
+    sched = make_scheduler("hiku", 100, seed=0)
+    sim = Simulator(sched, cfg=SimConfig(n_workers=100), seed=0)
+    sim.inject_failure(4.0, 17)
+    sim.inject_failure(4.0, 18)
+    sim.inject_worker(7.0, 120)
+    recs = sim.run(n_vus=500, duration_s=12.0)
+    return sched, sim, recs
+
+
+def test_scale_run_completes_requests(scale_run):
+    sched, sim, recs = scale_run
+    assert len(recs) > 5000  # closed loop at 500 VUs must sustain throughput
+    assert {r.vu for r in recs} == set(range(500))  # no VU starves or is lost
+    assert sched.pull_hits > 0 and sched.fallback_assigns > 0
+
+
+def test_scale_no_negative_connections(scale_run):
+    sched, _, _ = scale_run
+    assert all(c >= 0 for c in sched.conns.values())
+    assert sched.total_conns == sum(sched.conns[w] for w in sched.workers)
+
+
+def test_scale_queue_depth_consistent_after_worker_removal(scale_run):
+    sched, sim, recs = scale_run
+    # removed workers must be fully purged from every queue structure
+    for dead in (17, 18):
+        assert dead not in sched.workers
+        assert all(dead not in counts for counts in sched.idle_counts.values())
+        assert dead not in sched._worker_funcs or not sched._worker_funcs[dead]
+        assert not any(r.worker == dead for r in recs if r.t_submit > 4.5)
+    # elastic join picks up load
+    assert any(r.worker == 120 for r in recs)
+    # multiset totals == sum of counts, and depth telemetry agrees
+    for func, counts in sched.idle_counts.items():
+        assert all(n > 0 for n in counts.values())
+        assert sched.queue_depth(func) == sum(counts.values())
+    assert sched.queue_depth() == sum(
+        sum(c.values()) for c in sched.idle_counts.values()
+    )
+
+
+def test_scale_worker_accounting(scale_run):
+    _, sim, _ = scale_run
+    for w in sim.workers.values():
+        assert w.busy_mem_mb >= -1e-9 and w.idle_mem_mb >= -1e-9
+        assert w.mem_usage() <= w.pool_mb + 1e-9
+        # per-func idle lists stay ascending in last_used (LRU invariant)
+        for lst in w.idle.values():
+            assert all(a.last_used <= b.last_used for a, b in zip(lst, lst[1:]))
+        assert w.idle_mem_mb == pytest.approx(
+            sum(i.mem_mb for lst in w.idle.values() for i in lst)
+        )
+
+
+def test_scale_queue_entries_reference_live_workers(scale_run):
+    sched, _, _ = scale_run
+    live = set(sched.workers)
+    for counts in sched.idle_counts.values():
+        assert set(counts) <= live

@@ -1,11 +1,12 @@
-"""Scheduler semantics: Algorithm 1, baselines, and the JAX formulation."""
+"""Scheduler semantics: Algorithm 1, baselines, and the JAX formulation.
+
+The hypothesis-based python<->jax equivalence property test lives in
+test_scheduler_properties.py so this module runs without hypothesis."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import (
     ARRIVAL,
@@ -54,9 +55,13 @@ def test_hiku_algorithm1_semantics():
 def test_hiku_dequeues_least_loaded():
     s = HikuScheduler(3, seed=0)
     s.rng = _FirstChoice()
-    # enqueue workers 1 and 2 with different loads
-    s.conns = {0: 0, 1: 5, 2: 2}
-    s.idle_queues["f"] = [1, 2]
+    # enqueue workers 1 and 2 with different loads (pull signals decrement
+    # the connection count, so pre-load one extra connection each)
+    for w, c in ((1, 6), (2, 3)):
+        for _ in range(c):
+            s.on_assign(w, "f")
+    s.on_finish(1, "f")  # conns: {0: 0, 1: 5, 2: 3}; PQ_f = {1}
+    s.on_finish(2, "f")  # conns: {0: 0, 1: 5, 2: 2}; PQ_f = {1, 2}
     w = s.schedule("f")
     assert w == 2  # least-loaded enqueued worker, NOT global least-loaded (0)
 
@@ -99,46 +104,6 @@ def test_chbl_respects_bound():
     assert w != target  # spills to next non-overloaded clockwise
 
 
-# ------------------------------------------------- python <-> jax equivalence
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 10_000), n_events=st.integers(1, 60),
-       F=st.integers(1, 5), W=st.integers(1, 6))
-def test_jax_sched_equivalent_to_python(seed, n_events, F, W):
-    """Deterministic-tie-break JIQ: array formulation == Algorithm 1 object."""
-    rng = np.random.default_rng(seed)
-    py = HikuScheduler(W, seed=0)
-    py.rng = _FirstChoice()
-    state = init_state(F, W)
-    events = []
-    running = []  # (worker, func) active
-    for _ in range(n_events):
-        kind = rng.choice([ARRIVAL, FINISH]) if running else ARRIVAL
-        if kind == ARRIVAL:
-            f = int(rng.integers(0, F))
-            events.append((ARRIVAL, f, -1))
-        else:
-            w, f = running.pop(int(rng.integers(0, len(running))))
-            events.append((FINISH, f, w))
-        # drive python scheduler
-        k, f, w = events[-1]
-        if k == ARRIVAL:
-            wpy = py.schedule(str(f))
-            running.append((wpy, f))
-            events[-1] = (ARRIVAL, f, -1, wpy)  # remember for the check
-        else:
-            py.on_finish(w, str(f))
-            events[-1] = (FINISH, f, w, -1)
-    ev_arr = jnp.array([(k, f, w) for (k, f, w, _) in events], jnp.int32)
-    state, (ws, warm) = sched_many(state, ev_arr, key=None)
-    for i, (k, f, w, wpy) in enumerate(events):
-        if k == ARRIVAL:
-            assert int(ws[i]) == wpy, f"event {i}: jax={int(ws[i])} py={wpy}"
-    # final connection counts agree
-    np.testing.assert_array_equal(
-        np.asarray(state.conns), np.array([py.conns[w] for w in range(W)])
-    )
-
-
 def test_jax_sched_evict():
     state = init_state(2, 3)
     ev = jnp.array([
@@ -150,6 +115,26 @@ def test_jax_sched_evict():
     state, (ws, warm) = sched_many(state, ev)
     assert not bool(warm[3])
     assert int(state.idle.sum()) == 0
+
+
+def test_sched_many_fused_matches_scan():
+    """Chunked fused dispatch (interpret mode) == event-by-event scan."""
+    from repro.core import sched_many_fused
+
+    rng = np.random.default_rng(5)
+    state = init_state(6, 9)
+    events = []
+    for _ in range(150):
+        k = int(rng.integers(0, 3))
+        events.append((k, int(rng.integers(0, 6)), -1 if k == ARRIVAL else int(rng.integers(0, 9))))
+    ev = jnp.array(events, jnp.int32)
+    s1, (ws1, warm1) = sched_many(state, ev)
+    s2, (ws2, warm2) = sched_many_fused(state, ev, chunk=64, interpret=True)
+    assert jnp.all(ws1 == ws2) and jnp.all(warm1 == warm2)
+    assert jnp.all(s1.idle == s2.idle) and jnp.all(s1.conns == s2.conns)
+    # off-TPU default silently falls back to the scan path
+    s3, (ws3, _) = sched_many_fused(state, ev)
+    assert jnp.all(ws1 == ws3) and jnp.all(s1.conns == s3.conns)
 
 
 def test_jax_sched_random_tiebreak_uniform():

@@ -1,0 +1,92 @@
+"""Sharded multi-cluster driver throughput at the production-scale anchors.
+
+For each anchor (800 and 1600 total workers, 8 GB pools — the same configs
+``bench_sim_speed`` tracks) runs the sharded driver at 1, 4, and 8 shards
+and reports two rates:
+
+* ``makespan_ev_s`` — total events / end-to-end wall time of the driver
+  (process-pool backend for K>1; bounded by the local core count, so on a
+  2-core CI box this tops out near 2x);
+* ``aggregate_ev_s`` — the scale-out capacity metric: the sum of per-shard
+  event rates, each shard timed on its own wall clock inside its worker
+  process, exactly what K independent single-cluster deployments would
+  report in aggregate.  ``speedup_vs_1shard`` is computed on this metric
+  (the 1-shard case is the monolithic engine run through the same driver).
+
+``--quick`` runs a single 2-shard smoke at reduced scale (CI path).
+"""
+
+from __future__ import annotations
+
+import gc
+
+ANCHORS = {
+    "800w_8000vu_8g": dict(n_workers=800, n_vus=8000, duration_s=4.0, mem_pool_mb=8192.0),
+    "1600w_16000vu_8g": dict(n_workers=1600, n_vus=16000, duration_s=3.0, mem_pool_mb=8192.0),
+}
+SHARD_COUNTS = (1, 4, 8)
+QUICK_SMOKE = dict(n_workers=200, n_vus=2000, duration_s=2.0, mem_pool_mb=2048.0)
+
+
+def _clear_engine_caches() -> None:
+    from repro.core import simulator as _sim
+    from repro.core import trace as _trace
+
+    _sim._FLUCT_CACHE.clear()
+    _trace._PROG_CACHE.clear()
+
+
+def _run(n_shards: int, cfg_kw: dict, backend: str):
+    from repro.core import SimConfig
+    from repro.core.shard import ShardedSimulator
+
+    kw = dict(cfg_kw)
+    n_vus = kw.pop("n_vus")
+    duration_s = kw.pop("duration_s")
+    n_workers = kw.pop("n_workers")
+    _clear_engine_caches()
+    gc.collect()
+    driver = ShardedSimulator(
+        n_shards, n_workers, scheduler="hiku", cfg=SimConfig(**kw), seed=0, backend=backend
+    )
+    return driver.run(n_vus=n_vus, duration_s=duration_s)
+
+
+def run(quick: bool = False):
+    rows = []
+    if quick:
+        r = _run(2, QUICK_SMOKE, backend="auto")
+        rows.append(
+            (
+                "shard_scale/quick_2shards_200w",
+                r.wall_s / max(r.n_events, 1) * 1e6,
+                f"events={r.n_events};records={len(r.records)};"
+                f"makespan_s={r.wall_s:.2f};aggregate_ev_s={r.aggregate_events_per_s:.0f}",
+            )
+        )
+        return rows
+    for aname, cfg_kw in ANCHORS.items():
+        base_aggregate = None
+        for k in SHARD_COUNTS:
+            backend = "serial" if k == 1 else "process"
+            r = _run(k, cfg_kw, backend)
+            aggregate = r.aggregate_events_per_s
+            makespan_rate = r.events_per_s
+            if k == 1:
+                base_aggregate = aggregate
+            speedup = aggregate / base_aggregate if base_aggregate else float("nan")
+            rows.append(
+                (
+                    f"shard_scale/{aname}/{k}shards",
+                    r.wall_s / max(r.n_events, 1) * 1e6,
+                    f"events={r.n_events};makespan_s={r.wall_s:.2f};"
+                    f"makespan_ev_s={makespan_rate:.0f};aggregate_ev_s={aggregate:.0f};"
+                    f"speedup_vs_1shard={speedup:.1f}x",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -43,19 +43,22 @@ def run_matrix(
         duration_s = 30.0
     out: Dict[str, Dict] = {}
     for name in schedulers:
+        # latency_ms/cold hold one numpy column chunk per cell (concatenated
+        # lazily in stats()); no per-record Python objects are materialized
         per_sched = {"latency_ms": [], "cold": [], "cv_series": [], "per_vu_rps": {v: [] for v in vu_levels},
                      "n_requests": 0, "duration_total": 0.0}
         for seed in seeds:
             for vus in vu_levels:
                 sched = make_scheduler(name, 5, seed=seed)
                 sim = Simulator(sched, cfg=SimConfig(), seed=seed * 1000 + vus)
-                recs = sim.run(n_vus=vus, duration_s=duration_s)
-                per_sched["latency_ms"].extend(r.latency_ms for r in recs)
-                per_sched["cold"].extend(1.0 if r.cold else 0.0 for r in recs)
-                cv = load_cv_per_second(sim.assignments, list(range(5)), duration_s)
+                sim.run(n_vus=vus, duration_s=duration_s)
+                cols = sim.record_columns
+                per_sched["latency_ms"].append(cols.latency_ms)
+                per_sched["cold"].append(cols.cold.astype(np.float64))
+                cv = load_cv_per_second(sim.assignment_columns, list(range(5)), duration_s)
                 per_sched["cv_series"].append(cv)
-                per_sched["per_vu_rps"][vus].append(len(recs) / duration_s)
-                per_sched["n_requests"] += len(recs)
+                per_sched["per_vu_rps"][vus].append(len(cols) / duration_s)
+                per_sched["n_requests"] += len(cols)
                 per_sched["duration_total"] += duration_s
         out[name] = per_sched
     return out
@@ -87,8 +90,8 @@ def save_json(name: str, payload) -> Path:
 
 
 def stats(m: Dict, name: str) -> Dict[str, float]:
-    lat = np.array(m[name]["latency_ms"])
-    cold = np.array(m[name]["cold"])
+    lat = np.concatenate(m[name]["latency_ms"])
+    cold = np.concatenate(m[name]["cold"])
     cvs = np.concatenate([c for c in m[name]["cv_series"] if len(c)])
     return {
         "mean_ms": float(lat.mean()),

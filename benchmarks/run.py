@@ -26,6 +26,7 @@ def main(argv=None) -> None:
         bench_latency,
         bench_overhead,
         bench_pull_dispatch,
+        bench_shard_scale,
         bench_sim_speed,
         bench_table1,
         bench_trace,
@@ -44,6 +45,7 @@ def main(argv=None) -> None:
         "kernels": bench_kernels,
         "pull_dispatch": bench_pull_dispatch,
         "sim_speed": bench_sim_speed,
+        "shard_scale": bench_shard_scale,
     }
     if args.only:
         keep = set(args.only.split(","))

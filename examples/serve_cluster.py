@@ -2,11 +2,13 @@
 
 Replays the paper's evaluation protocol — 5 workers, 40 Azure-weighted
 functions, closed-loop VUs at 20/50/100, seeded identical workloads per
-scheduler — through the cluster simulator, then serves a *real* small model
-with batched requests through the engine under the same scheduler, including
-a worker failure + elastic re-join mid-run.
+scheduler — through the cluster simulator, scales the same protocol out
+across K independent cluster shards via the sharded multi-cluster driver,
+then serves a *real* small model with batched requests through the engine
+under the same scheduler, including a worker failure + elastic re-join
+mid-run.
 
-    PYTHONPATH=src python examples/serve_cluster.py [--quick]
+    PYTHONPATH=src python examples/serve_cluster.py [--quick] [--shards K]
 """
 
 import argparse
@@ -16,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import SimConfig, Simulator, make_scheduler, summarize
+from repro.core import ShardedSimulator, SimConfig, Simulator, make_scheduler, summarize
 from repro.serving import Endpoint, ServingEngine
 
 
@@ -42,6 +44,24 @@ def replay_paper_protocol(quick: bool):
     print(f"\nhiku vs ch_bl: latency {100*(c[0]-h[0])/c[0]:+.1f}% "
           f"(paper: 14.9%), cold {h[1]:.0%} vs {c[1]:.0%} (paper: 30% vs 43%), "
           f"throughput {100*(h[3]-c[3])/c[3]:+.1f}% (paper: +8.3%)")
+
+
+def sharded_scale_out(quick: bool, n_shards: int):
+    n_workers, n_vus, dur = (100, 400, 10.0) if quick else (400, 2000, 20.0)
+    print(f"\n== sharded multi-cluster driver: {n_shards} shards, "
+          f"{n_workers} workers, {n_vus} VUs, {dur:.0f}s ==")
+    driver = ShardedSimulator(n_shards, n_workers, scheduler="hiku",
+                              cfg=SimConfig(mem_pool_mb=4096.0), seed=3, backend="auto")
+    run = driver.run(n_vus=n_vus, duration_s=dur)
+    for r in run.shards:
+        print(f"  shard {r.spec.index}: seed={r.spec.seed} "
+              f"{r.spec.cfg.n_workers}w/{r.spec.n_vus}vu -> {len(r.records)} reqs "
+              f"@ {r.n_events / r.wall_s:,.0f} ev/s")
+    m = run.summarize(dur)
+    print(f"  merged: {m.n_requests} requests, mean {m.mean_latency_ms:.0f} ms, "
+          f"p99 {m.p99_ms:.0f} ms, cold {m.cold_rate:.1%}, CV {m.load_cv:.2f}")
+    print(f"  makespan {run.wall_s:.2f}s ({run.events_per_s:,.0f} ev/s end-to-end), "
+          f"aggregate capacity {run.aggregate_events_per_s:,.0f} ev/s")
 
 
 def serve_real_batched(quick: bool):
@@ -72,6 +92,9 @@ def serve_real_batched(quick: bool):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count for the multi-cluster driver section")
     args = ap.parse_args()
     replay_paper_protocol(args.quick)
+    sharded_scale_out(args.quick, args.shards)
     serve_real_batched(args.quick)

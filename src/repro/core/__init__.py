@@ -14,7 +14,9 @@ from .jax_sched import (
     sched_step,
 )
 from .metrics import RunMetrics, latency_cdf, load_cv_per_second, summarize
+from .records import RecordAccumulator, RecordColumns, RequestRecord
 from .scheduler import Scheduler, available_schedulers, make_scheduler
+from .shard import MergedRun, ShardedSimulator, ShardResult, ShardSpec, shard_seed
 from .simulator import SimConfig, Simulator
 from .trace import FunctionSpec, make_functions, make_vu_programs
 
@@ -25,8 +27,15 @@ __all__ = [
     "FunctionSpec",
     "HikuScheduler",
     "JIQState",
+    "MergedRun",
+    "RecordAccumulator",
+    "RecordColumns",
+    "RequestRecord",
     "RunMetrics",
     "Scheduler",
+    "ShardResult",
+    "ShardSpec",
+    "ShardedSimulator",
     "SimConfig",
     "Simulator",
     "available_schedulers",
@@ -39,5 +48,6 @@ __all__ = [
     "sched_many",
     "sched_many_fused",
     "sched_step",
+    "shard_seed",
     "summarize",
 ]

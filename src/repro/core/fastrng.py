@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import json
 import math
+import warnings
 from pathlib import Path
 from typing import Optional, Tuple
 
@@ -177,6 +178,27 @@ def _first_uint64(seed: int, vu: np.ndarray, ev: np.ndarray):
 # ------------------------------------------------------------------- tables
 _TABLES: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
 _SELFTEST_OK: Optional[bool] = None
+_FALLBACK_WARNED = False
+
+
+def _warn_fallback_once() -> None:
+    """One warning per process when the self-test disables the fast path.
+
+    The slow path is engaged on *every* subsequent call, so the guard keeps
+    a degraded environment (e.g. a numpy upgrade that changed the PCG64 /
+    ziggurat stream) from spamming a warning per matrix request while still
+    surfacing the ~50x slowdown once.
+    """
+    global _FALLBACK_WARNED
+    if not _FALLBACK_WARNED:
+        _FALLBACK_WARNED = True
+        warnings.warn(
+            "fastrng fast path disabled (runtime self-test mismatch with this "
+            "numpy's default_rng stream); falling back to per-tuple "
+            "default_rng draws — still bit-exact, but ~50x slower",
+            RuntimeWarning,
+            stacklevel=3,
+        )
 
 
 def _load_tables() -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -250,6 +272,7 @@ def _lognormal_matrix_impl(
     ev_start: int = 0,
 ) -> np.ndarray:
     if check and not selftest():
+        _warn_fallback_once()
         return np.array(
             [
                 [_slow_one(seed, v, e, mean, sigma) for e in range(ev_start, ev_start + n_events)]

@@ -1,13 +1,26 @@
-"""Metrics of Section V: latency, cold-start rate, load imbalance (CV), throughput."""
+"""Metrics of Section V: latency, cold-start rate, load imbalance (CV), throughput.
+
+All metrics operate natively on the columnar record store (PR 2): a single
+vectorized pass over ``RecordColumns`` / assignment arrays.  The legacy
+row-API inputs (list of ``RequestRecord``, list of ``(t, worker)`` tuples)
+are accepted through thin adapters that convert to columns first — the
+numeric results are float-for-float identical either way, because the
+vectorized expressions are the elementwise IEEE operations the old Python
+loops performed (tests/test_records.py pins the parity at tolerance 0).
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple, Union
 
 import numpy as np
 
-from .simulator import RequestRecord
+from .records import RecordColumns, RequestRecord
+
+RecordsLike = Union[RecordColumns, Sequence[RequestRecord]]
+#: assignments as the legacy ``[(t, worker), ...]`` or ``(t[], worker[])`` arrays
+AssignmentsLike = Union[Sequence[Tuple[float, int]], Tuple[np.ndarray, np.ndarray]]
 
 
 @dataclasses.dataclass
@@ -26,8 +39,32 @@ class RunMetrics:
         return dataclasses.asdict(self)
 
 
-def latency_cdf(records: Sequence[RequestRecord], n_points: int = 200) -> Tuple[np.ndarray, np.ndarray]:
-    lat = np.sort([r.latency_ms for r in records])
+def _assignment_arrays(assignments: AssignmentsLike) -> Tuple[np.ndarray, np.ndarray]:
+    """Adapter: legacy ``[(t, worker), ...]`` rows or a 2-tuple of ``(t,
+    worker)`` columns (ndarrays or plain lists) -> float64/int64 arrays.
+
+    A 2-tuple whose elements are arrays/lists is the columnar form; row
+    streams are tuples-inside-a-sequence, so the shapes don't collide.
+    """
+    if (
+        isinstance(assignments, tuple)
+        and len(assignments) == 2
+        and all(isinstance(c, (np.ndarray, list)) for c in assignments)
+    ):
+        t = np.asarray(assignments[0], np.float64)
+        w = np.asarray(assignments[1], np.int64)
+        if t.shape != w.shape:
+            raise ValueError(f"assignment column lengths differ: {t.shape} vs {w.shape}")
+        return t, w
+    if not len(assignments):
+        return np.zeros(0), np.zeros(0, np.int64)
+    t, w = zip(*assignments)
+    return np.asarray(t, np.float64), np.asarray(w, np.int64)
+
+
+def latency_cdf(records: RecordsLike, n_points: int = 200) -> Tuple[np.ndarray, np.ndarray]:
+    cols = RecordColumns.from_records(records)
+    lat = np.sort(cols.latency_ms)
     y = np.arange(1, len(lat) + 1) / len(lat)
     if len(lat) > n_points:
         idx = np.linspace(0, len(lat) - 1, n_points).astype(int)
@@ -36,21 +73,33 @@ def latency_cdf(records: Sequence[RequestRecord], n_points: int = 200) -> Tuple[
 
 
 def load_cv_per_second(
-    assignments: Sequence[Tuple[float, int]], workers: Sequence[int], t_end: float
+    assignments: AssignmentsLike, workers: Sequence[int], t_end: float
 ) -> np.ndarray:
     """Per-1s-bin CV across workers of assignment counts (Figure 14).
 
     The paper defines load imbalance as the coefficient of variation of the
-    number of requests assigned per worker per second.
+    number of requests assigned per worker per second.  Vectorized: one
+    ``bincount`` over ``bin * n_workers + worker_index`` — the integer count
+    matrix is identical to the old per-assignment Python loop, so the CV
+    series is bit-identical.
     """
-    if not assignments:
+    at, aw = _assignment_arrays(assignments)
+    if at.size == 0 or not len(workers):
         return np.zeros(0)
     n_bins = int(np.ceil(t_end)) + 1
-    wid_index = {w: i for i, w in enumerate(workers)}
-    counts = np.zeros((n_bins, len(workers)))
-    for t, w in assignments:
-        if w in wid_index:
-            counts[min(int(t), n_bins - 1), wid_index[w]] += 1
+    n_w = len(workers)
+    # dense worker-id -> column lookup (ids are small nonnegative ints)
+    max_id = int(max(int(aw.max(initial=0)), max(workers)))
+    lut = np.full(max_id + 1, -1, np.int64)
+    for i, w in enumerate(workers):
+        if 0 <= w <= max_id:
+            lut[w] = i
+    widx = lut[aw]
+    known = widx >= 0
+    bins = np.minimum(at.astype(np.int64), n_bins - 1)
+    flat = bins[known] * n_w + widx[known]
+    counts = np.bincount(flat, minlength=n_bins * n_w).reshape(n_bins, n_w)
+    counts = counts.astype(np.float64)
     active = counts.sum(axis=1) > 0
     counts = counts[active]
     mean = counts.mean(axis=1)
@@ -59,22 +108,24 @@ def load_cv_per_second(
 
 
 def summarize(
-    records: Sequence[RequestRecord],
-    assignments: Sequence[Tuple[float, int]],
+    records: RecordsLike,
+    assignments: AssignmentsLike,
     workers: Sequence[int],
     duration_s: float,
 ) -> RunMetrics:
-    lat = np.array([r.latency_ms for r in records]) if records else np.zeros(1)
-    cold = np.array([r.cold for r in records]) if records else np.zeros(1)
+    cols = RecordColumns.from_records(records)
+    n = len(cols)
+    lat = cols.latency_ms if n else np.zeros(1)
+    cold = cols.cold if n else np.zeros(1)
     cv = load_cv_per_second(assignments, workers, duration_s)
     return RunMetrics(
-        n_requests=len(records),
+        n_requests=n,
         mean_latency_ms=float(lat.mean()),
         p50_ms=float(np.percentile(lat, 50)),
         p90_ms=float(np.percentile(lat, 90)),
         p95_ms=float(np.percentile(lat, 95)),
         p99_ms=float(np.percentile(lat, 99)),
         cold_rate=float(cold.mean()),
-        throughput_rps=len(records) / max(duration_s, 1e-9),
+        throughput_rps=n / max(duration_s, 1e-9),
         load_cv=float(cv.mean()) if cv.size else 0.0,
     )

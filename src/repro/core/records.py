@@ -1,0 +1,241 @@
+"""Columnar request-record store (the scale-out substrate of PR 2).
+
+The simulator historically accumulated one ``RequestRecord`` NamedTuple per
+completed request and one ``(t, worker)`` tuple per assignment — fine for the
+paper's 5-worker protocol, hostile to production-scale runs: per-record
+Python objects dominate memory at millions of requests, every metric pays a
+Python-loop extraction, and shipping shard results between processes pickles
+object graphs instead of buffers.
+
+This module stores the same stream as six parallel columns::
+
+    t_submit  float64   submission time (s)
+    t_done    float64   completion time incl. scheduler overhead (s)
+    func      int32     function index
+    worker    int32     worker id (shard-local until merged)
+    cold      bool      cold-start flag
+    vu        int32     virtual-user id (shard-local until merged)
+
+Contracts:
+
+* **Byte fidelity** — conversion ``records <-> columns`` is lossless:
+  float64 columns hold the exact same doubles the NamedTuples carried, so
+  the frozen-seed-engine equivalence suite keeps byte-for-byte guarantees
+  through the columnar path (tests/test_records*.py pin the round-trip).
+* **Order preservation** — columns keep the engine's completion order;
+  ``concat``/``take`` are the only reordering primitives and both are
+  explicit.
+* **Zero-copy views** — ``as_structured`` reinterprets nothing; it copies
+  once into a packed structured array for storage/IPC, and ``columns`` of a
+  ``RecordColumns`` are the live numpy arrays (no per-access copies).
+
+``RecordAccumulator`` is the growable form the simulator appends into
+(plain Python lists per column — the cheapest exact append available to the
+interpreter), snapshotting to ``RecordColumns`` on demand.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, List, NamedTuple, Sequence, Union
+
+import numpy as np
+
+
+class RequestRecord(NamedTuple):
+    """One completed request (the legacy row API, kept as the adapter)."""
+
+    t_submit: float
+    t_complete: float
+    func: int
+    worker: int
+    cold: bool
+    vu: int
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_complete - self.t_submit) * 1e3
+
+
+#: packed on-disk / IPC layout of one record row
+REC_DTYPE = np.dtype(
+    [
+        ("t_submit", "<f8"),
+        ("t_done", "<f8"),
+        ("func", "<i4"),
+        ("worker", "<i4"),
+        ("cold", "?"),
+        ("vu", "<i4"),
+    ]
+)
+
+_FIELDS = ("t_submit", "t_done", "func", "worker", "cold", "vu")
+_COL_DTYPES = (np.float64, np.float64, np.int32, np.int32, np.bool_, np.int32)
+
+
+class RecordColumns:
+    """Six parallel numpy columns over a request-record stream."""
+
+    __slots__ = _FIELDS
+
+    def __init__(self, t_submit, t_done, func, worker, cold, vu):
+        self.t_submit = np.asarray(t_submit, np.float64)
+        self.t_done = np.asarray(t_done, np.float64)
+        self.func = np.asarray(func, np.int32)
+        self.worker = np.asarray(worker, np.int32)
+        self.cold = np.asarray(cold, np.bool_)
+        self.vu = np.asarray(vu, np.int32)
+        n = self.t_submit.shape[0]
+        for name in _FIELDS[1:]:
+            if getattr(self, name).shape != (n,):
+                raise ValueError(f"column {name!r} length != {n}")
+
+    # ------------------------------------------------------------ conversion
+    @classmethod
+    def from_records(
+        cls, records: Union["RecordColumns", Sequence[RequestRecord]]
+    ) -> "RecordColumns":
+        """Adapter: list-of-``RequestRecord`` (or any row 6-tuples) -> columns."""
+        if isinstance(records, RecordColumns):
+            return records
+        if not len(records):
+            return cls.empty()
+        return cls(*zip(*records))
+
+    def to_records(self) -> List[RequestRecord]:
+        """Columns -> list of ``RequestRecord`` with native Python scalars.
+
+        ``ndarray.tolist`` yields the exact doubles/ints/bools stored, so the
+        round-trip is bit-lossless.
+        """
+        return [
+            RequestRecord(*row)
+            for row in zip(
+                self.t_submit.tolist(),
+                self.t_done.tolist(),
+                self.func.tolist(),
+                self.worker.tolist(),
+                self.cold.tolist(),
+                self.vu.tolist(),
+            )
+        ]
+
+    @classmethod
+    def empty(cls) -> "RecordColumns":
+        return cls((), (), (), (), (), ())
+
+    def as_structured(self) -> np.ndarray:
+        """Packed structured array (``REC_DTYPE``) — one buffer for IPC/disk."""
+        out = np.empty(len(self), REC_DTYPE)
+        for name in _FIELDS:
+            out[name] = getattr(self, name)
+        return out
+
+    @classmethod
+    def from_structured(cls, arr: np.ndarray) -> "RecordColumns":
+        if arr.dtype != REC_DTYPE:
+            arr = arr.astype(REC_DTYPE)
+        return cls(*(arr[name] for name in _FIELDS))
+
+    # -------------------------------------------------------------- protocol
+    def __len__(self) -> int:
+        return self.t_submit.shape[0]
+
+    def __iter__(self) -> Iterator[RequestRecord]:
+        return iter(self.to_records())
+
+    def __getitem__(self, i):
+        if isinstance(i, (int, np.integer)):
+            return RequestRecord(
+                float(self.t_submit[i]),
+                float(self.t_done[i]),
+                int(self.func[i]),
+                int(self.worker[i]),
+                bool(self.cold[i]),
+                int(self.vu[i]),
+            )
+        return RecordColumns(*(getattr(self, name)[i] for name in _FIELDS))
+
+    def equals(self, other: "RecordColumns") -> bool:
+        return len(self) == len(other) and all(
+            np.array_equal(getattr(self, name), getattr(other, name)) for name in _FIELDS
+        )
+
+    # --------------------------------------------------------------- derived
+    @property
+    def latency_ms(self) -> np.ndarray:
+        """Vectorized ``RequestRecord.latency_ms``: identical doubles."""
+        return (self.t_done - self.t_submit) * 1e3
+
+    # ---------------------------------------------------------------- reshaping
+    @staticmethod
+    def concat(parts: Sequence["RecordColumns"]) -> "RecordColumns":
+        parts = [p for p in parts if len(p)]
+        if not parts:
+            return RecordColumns.empty()
+        return RecordColumns(
+            *(np.concatenate([getattr(p, name) for p in parts]) for name in _FIELDS)
+        )
+
+    def take(self, idx: np.ndarray) -> "RecordColumns":
+        return RecordColumns(*(getattr(self, name)[idx] for name in _FIELDS))
+
+    def remap(self, worker_offset: int = 0, vu_offset: int = 0) -> "RecordColumns":
+        """Shift shard-local worker/VU ids into a global id range (merge step)."""
+        if not worker_offset and not vu_offset:
+            return self
+        return RecordColumns(
+            self.t_submit,
+            self.t_done,
+            self.func,
+            self.worker + np.int32(worker_offset),
+            self.cold,
+            self.vu + np.int32(vu_offset),
+        )
+
+
+class RecordAccumulator:
+    """Growable columnar accumulator the simulator hot loop appends into.
+
+    Per-column Python lists: a list append is the cheapest exact way to grow
+    from the interpreter, and the values stored are the *same* Python floats
+    /bools the legacy NamedTuple stream carried, so ``to_records`` is exact
+    by construction (no float round-trip at all on the list path).
+    """
+
+    __slots__ = ("t_submit", "t_done", "func", "worker", "cold", "vu")
+
+    def __init__(self):
+        self.t_submit: List[float] = []
+        self.t_done: List[float] = []
+        self.func: List[int] = []
+        self.worker: List[int] = []
+        self.cold: List[bool] = []
+        self.vu: List[int] = []
+
+    def append(self, t_submit, t_done, func, worker, cold, vu) -> None:
+        self.t_submit.append(t_submit)
+        self.t_done.append(t_done)
+        self.func.append(func)
+        self.worker.append(worker)
+        self.cold.append(cold)
+        self.vu.append(vu)
+
+    def __len__(self) -> int:
+        return len(self.t_submit)
+
+    def columns(self) -> RecordColumns:
+        return RecordColumns(
+            self.t_submit, self.t_done, self.func, self.worker, self.cold, self.vu
+        )
+
+    def to_records(self) -> List[RequestRecord]:
+        return [
+            RequestRecord(*row)
+            for row in zip(
+                self.t_submit, self.t_done, self.func, self.worker, self.cold, self.vu
+            )
+        ]
+
+    def clear(self) -> None:
+        for name in self.__slots__:
+            getattr(self, name).clear()

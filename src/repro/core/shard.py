@@ -1,0 +1,372 @@
+"""Sharded multi-cluster simulation driver (the ROADMAP's scale-out step).
+
+Partitions a large cluster and its virtual-user population into ``K``
+independent shards — each a self-contained ``Simulator`` with its own seed
+stream, worker pool, function population, and scheduler instance (serverless
+scheduling as job scheduling across independent pools, per NOAH; core-granular
+multi-cluster scheduling at datacenter scale, per Kaffes et al.) — runs them
+on one of three backends, and merges the per-shard record streams into one
+columnar store (``core.records``).
+
+Contracts (pinned by tests/test_shard.py, tests/test_invariants.py, and the
+frozen-seed-engine checks in tests/test_equivalence.py):
+
+* **Per-shard exactness** — a shard's ``RequestRecord`` stream is
+  byte-identical to a monolithic run of that shard's slice through the plain
+  engine (and therefore to the frozen seed engine), on every backend.
+* **Seeding contract** — shard ``k`` of a driver seeded with ``seed`` runs
+  with ``shard_seed(seed, k) = (seed + 0x9E3779B1 * k) mod 2**32``: a
+  golden-ratio uint32 stride keeps shard streams disjoint while staying in
+  the single-word-entropy range the vectorized service RNG covers.
+* **Partition contract** — workers and VUs split largest-remainder evenly
+  (sizes differ by at most one); shard ``k`` owns the contiguous global id
+  ranges starting at its prefix-sum offsets.
+* **Merge semantics** — shard-local worker/VU ids are remapped by the shard
+  offsets into disjoint global ranges, then streams are stable-merged by
+  completion time (ties broken by shard index), matching the completion
+  order a monolithic engine emits.  Aggregate metrics come out of one
+  vectorized pass over the merged columns.
+
+Backends:
+
+* ``process`` — fork-based process pool, one shard per core; shard results
+  travel back as numpy column buffers, not object graphs.
+* ``interleaved`` — cooperative round-robin of ``Simulator.run_iter``
+  generators in a single process (deterministic, no IPC; the fallback where
+  fork is unavailable).
+* ``serial`` — one shard after another (the K=1 degenerate case).
+
+``aggregate_events_per_s`` is the scale-out capacity metric: the sum of
+per-shard event rates, each shard measured on its own wall clock — what K
+independent clusters report in aggregate.  The makespan-based rate
+(``n_events / wall_s``) is additionally bounded by the local core count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import time
+import warnings
+from collections import deque
+from concurrent.futures import ProcessPoolExecutor
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .metrics import RunMetrics, summarize
+from .records import RecordColumns
+from .scheduler import make_scheduler
+from .simulator import SimConfig, Simulator
+
+__all__ = [
+    "SEED_STRIDE",
+    "MergedRun",
+    "ShardResult",
+    "ShardSpec",
+    "ShardedSimulator",
+    "build_simulator",
+    "merge_shard_results",
+    "run_shard",
+    "shard_seed",
+    "split_even",
+]
+
+SEED_STRIDE = 0x9E3779B1  # golden-ratio uint32 stride (per-shard seed contract)
+
+
+def shard_seed(seed: int, index: int) -> int:
+    """Per-shard base seed (documented contract; see module docstring)."""
+    return (int(seed) + SEED_STRIDE * int(index)) % (2**32)
+
+
+def split_even(total: int, parts: int) -> List[int]:
+    """Largest-remainder partition: sizes differ by at most 1, sum == total."""
+    base, rem = divmod(int(total), int(parts))
+    return [base + (1 if i < rem else 0) for i in range(parts)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Everything needed to replay one shard deterministically (picklable)."""
+
+    index: int
+    n_shards: int
+    scheduler: str
+    seed: int
+    n_vus: int
+    duration_s: float
+    cfg: SimConfig  # n_workers already set to this shard's share
+    worker_offset: int  # global id base for this shard's workers
+    vu_offset: int  # global id base for this shard's VUs
+    failures: Tuple[Tuple[float, int], ...] = ()  # (t, local worker id)
+    additions: Tuple[Tuple[float, int], ...] = ()  # (t, local worker id)
+
+
+@dataclasses.dataclass
+class ShardResult:
+    """One shard's output: columnar stream with *shard-local* ids (the exact
+    byte-identical replay of that slice) plus its throughput accounting."""
+
+    spec: ShardSpec
+    records: RecordColumns
+    assign_t: np.ndarray
+    assign_w: np.ndarray
+    n_events: int
+    wall_s: float
+
+
+def build_simulator(spec: ShardSpec) -> Simulator:
+    """Construct the shard's scheduler + simulator exactly as specced."""
+    sched = make_scheduler(spec.scheduler, spec.cfg.n_workers, seed=spec.seed)
+    sim = Simulator(sched, cfg=spec.cfg, seed=spec.seed)
+    for t, w in spec.failures:
+        sim.inject_failure(t, w)
+    for t, w in spec.additions:
+        sim.inject_worker(t, w)
+    return sim
+
+
+def _result_from(spec: ShardSpec, sim: Simulator, wall_s: float) -> ShardResult:
+    at, aw = sim.assignment_columns
+    return ShardResult(
+        spec=spec,
+        records=sim.record_columns,
+        assign_t=at,
+        assign_w=aw,
+        n_events=sim.n_events,
+        wall_s=wall_s,
+    )
+
+
+def run_shard(spec: ShardSpec) -> ShardResult:
+    """Run one shard to completion (the process-pool entry point).
+
+    Drains ``run_iter`` directly so no per-record Python objects are ever
+    materialized — results cross process boundaries as column buffers.
+    """
+    sim = build_simulator(spec)
+    t0 = time.perf_counter()
+    for _ in sim.run_iter(n_vus=spec.n_vus, duration_s=spec.duration_s):
+        pass
+    return _result_from(spec, sim, time.perf_counter() - t0)
+
+
+@dataclasses.dataclass
+class MergedRun:
+    """K shard results merged into one global columnar stream."""
+
+    shards: List[ShardResult]
+    records: RecordColumns  # global ids, stable-merged by completion time
+    assign_t: np.ndarray  # global assignment trace, stable-merged by time
+    assign_w: np.ndarray
+    workers: List[int]  # global ids of the statically partitioned workers
+    n_events: int
+    wall_s: float  # end-to-end makespan including backend overhead
+
+    @property
+    def events_per_s(self) -> float:
+        """Makespan throughput: bounded by local cores running the backends."""
+        return self.n_events / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def aggregate_events_per_s(self) -> float:
+        """Scale-out capacity: sum of per-shard rates on their own clocks."""
+        return float(sum(r.n_events / r.wall_s for r in self.shards if r.wall_s > 0))
+
+    def summarize(self, duration_s: float) -> RunMetrics:
+        return summarize(
+            self.records, (self.assign_t, self.assign_w), self.workers, duration_s
+        )
+
+
+def merge_shard_results(results: Sequence[ShardResult], wall_s: float) -> MergedRun:
+    """Remap shard-local ids to global ranges and stable-merge by time."""
+    results = sorted(results, key=lambda r: r.spec.index)
+    parts = [
+        r.records.remap(worker_offset=r.spec.worker_offset, vu_offset=r.spec.vu_offset)
+        for r in results
+    ]
+    cat = RecordColumns.concat(parts)
+    records = cat.take(np.argsort(cat.t_done, kind="stable")) if len(cat) else cat
+    if results:
+        at = np.concatenate([r.assign_t for r in results])
+        aw = np.concatenate([r.assign_w + r.spec.worker_offset for r in results])
+        order = np.argsort(at, kind="stable")
+        at, aw = at[order], aw[order]
+    else:
+        at, aw = np.zeros(0), np.zeros(0, np.int64)
+    workers = [
+        r.spec.worker_offset + i for r in results for i in range(r.spec.cfg.n_workers)
+    ]
+    return MergedRun(
+        shards=list(results),
+        records=records,
+        assign_t=at,
+        assign_w=aw,
+        workers=workers,
+        n_events=sum(r.n_events for r in results),
+        wall_s=wall_s,
+    )
+
+
+def _run_process_pool(
+    specs: Sequence[ShardSpec], max_workers: Optional[int] = None
+) -> List[ShardResult]:
+    # fork is the only start method that doesn't re-pay the jax import in
+    # every child; shard children are pure numpy/heapq and never enter XLA,
+    # so jax's blanket fork-deadlock warning doesn't apply — suppress just
+    # that warning at the fork site.  REPRO_SHARD_START_METHOD overrides
+    # (spawn/forkserver) for environments where fork is not viable.
+    start = os.environ.get("REPRO_SHARD_START_METHOD") or (
+        "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+    )
+    ctx = mp.get_context(start)
+    max_workers = max_workers or min(len(specs), os.cpu_count() or 1)
+    with warnings.catch_warnings():
+        if start == "fork":
+            warnings.filterwarnings(
+                "ignore", message=r"os\.fork\(\) was called", category=RuntimeWarning
+            )
+        with ProcessPoolExecutor(max_workers=max_workers, mp_context=ctx) as pool:
+            return list(pool.map(run_shard, specs))
+
+
+def _run_interleaved(
+    specs: Sequence[ShardSpec], yield_every: int = 2048
+) -> List[ShardResult]:
+    """Round-robin the shard event loops cooperatively in this process."""
+    sims = [build_simulator(spec) for spec in specs]
+    walls = [0.0] * len(specs)
+    ready = deque(
+        (i, sim.run_iter(n_vus=spec.n_vus, duration_s=spec.duration_s,
+                         yield_every=yield_every))
+        for i, (spec, sim) in enumerate(zip(specs, sims))
+    )
+    while ready:
+        i, gen = ready.popleft()
+        t0 = time.perf_counter()
+        try:
+            next(gen)
+        except StopIteration:
+            gen = None
+        walls[i] += time.perf_counter() - t0
+        if gen is not None:
+            ready.append((i, gen))
+    return [
+        _result_from(spec, sim, walls[i])
+        for i, (spec, sim) in enumerate(zip(specs, sims))
+    ]
+
+
+class ShardedSimulator:
+    """K independent ``Simulator`` shards behind one ``run()`` call.
+
+    Elasticity and fault injection stay per-shard (each shard is an
+    independent cluster): ``inject_failure`` takes a *global* worker id and
+    maps it onto the owning shard via the static partition;
+    ``inject_worker`` re-registers a worker on an explicit shard.  Added
+    local ids must fall inside the shard's static span (i.e. elastic joins
+    are re-joins of failed workers) — ids beyond the span would remap into
+    the *next* shard's global range after the merge, so they are rejected.
+    """
+
+    def __init__(
+        self,
+        n_shards: int,
+        n_workers: int,
+        scheduler: str = "hiku",
+        cfg: Optional[SimConfig] = None,
+        seed: int = 0,
+        backend: str = "auto",
+    ):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if n_workers < n_shards:
+            raise ValueError("need at least one worker per shard")
+        if backend not in ("auto", "serial", "interleaved", "process"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.n_shards = int(n_shards)
+        self.n_workers = int(n_workers)
+        self.scheduler = scheduler
+        self.cfg = cfg or SimConfig()
+        self.seed = int(seed)
+        self.backend = backend
+        self._failures: List[Tuple[int, float, int]] = []  # (shard, t, local id)
+        self._additions: List[Tuple[int, float, int]] = []
+        self.worker_split = split_even(self.n_workers, self.n_shards)
+        self.worker_offsets = [0]
+        for n in self.worker_split:
+            self.worker_offsets.append(self.worker_offsets[-1] + n)
+
+    # ------------------------------------------------------------ topology
+    def shard_of_worker(self, worker: int) -> Tuple[int, int]:
+        """Global worker id -> (shard index, shard-local worker id)."""
+        for k in range(self.n_shards):
+            lo, hi = self.worker_offsets[k], self.worker_offsets[k + 1]
+            if lo <= worker < hi:
+                return k, worker - lo
+        raise ValueError(f"worker {worker} outside the static partition")
+
+    def inject_failure(self, t: float, worker: int) -> None:
+        k, local = self.shard_of_worker(worker)
+        self._failures.append((k, t, local))
+
+    def inject_worker(self, t: float, local_worker: int, shard: int = 0) -> None:
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        if not 0 <= local_worker < self.worker_split[shard]:
+            raise ValueError(
+                f"local worker {local_worker} outside shard {shard}'s static "
+                f"span of {self.worker_split[shard]} ids; global-id merge "
+                "remapping only covers re-joins within the span"
+            )
+        self._additions.append((shard, t, local_worker))
+
+    # ---------------------------------------------------------------- plan
+    def plan(self, n_vus: int, duration_s: float) -> List[ShardSpec]:
+        """The deterministic per-shard specs a run() with these args uses."""
+        vu_split = split_even(n_vus, self.n_shards)
+        vu_off = 0
+        specs = []
+        for k in range(self.n_shards):
+            specs.append(
+                ShardSpec(
+                    index=k,
+                    n_shards=self.n_shards,
+                    scheduler=self.scheduler,
+                    seed=shard_seed(self.seed, k),
+                    n_vus=vu_split[k],
+                    duration_s=float(duration_s),
+                    cfg=dataclasses.replace(self.cfg, n_workers=self.worker_split[k]),
+                    worker_offset=self.worker_offsets[k],
+                    vu_offset=vu_off,
+                    failures=tuple((t, w) for s, t, w in self._failures if s == k),
+                    additions=tuple((t, w) for s, t, w in self._additions if s == k),
+                )
+            )
+            vu_off += vu_split[k]
+        return specs
+
+    def _resolve_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        if self.n_shards == 1:
+            return "serial"
+        if "fork" in mp.get_all_start_methods() and (os.cpu_count() or 1) > 1:
+            return "process"
+        return "interleaved"
+
+    # ----------------------------------------------------------------- run
+    def run(self, n_vus: int = 20, duration_s: float = 100.0) -> MergedRun:
+        specs = self.plan(n_vus, duration_s)
+        backend = self._resolve_backend()
+        t0 = time.perf_counter()
+        if backend == "process":
+            results = _run_process_pool(specs)
+        elif backend == "interleaved":
+            results = _run_interleaved(specs)
+        else:
+            results = [run_shard(s) for s in specs]
+        return merge_shard_results(results, time.perf_counter() - t0)

@@ -32,6 +32,16 @@ an order of magnitude faster at scale:
 * the event loop dispatches on integer event kinds with pre-resolved
   function metadata (name/memory/latency arrays) instead of per-event
   getattr + dataclass attribute chases.
+
+Columnar accumulation (PR 2): records and assignments accumulate into
+per-column buffers (``core.records``) instead of per-record Python objects.
+``Simulator.records`` / ``Simulator.assignments`` remain list views
+(materialized lazily, cached) so the legacy API — and the byte-for-byte
+equivalence suite against tests/legacy — is unchanged, while
+``record_columns`` / ``assignment_columns`` expose the stream as numpy
+arrays for vectorized metrics, cheap IPC, and the sharded driver
+(``core.shard``).  ``run_iter`` is the generator form of ``run`` used by
+the sharded driver's interleaved backend.
 """
 
 from __future__ import annotations
@@ -39,10 +49,11 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .records import RecordAccumulator, RecordColumns, RequestRecord
 from .scheduler import Scheduler
 from .trace import FunctionSpec, VUProgram, make_functions, make_vu_programs, service_fluctuations
 
@@ -62,17 +73,9 @@ class SimConfig:
     retry_delay_s: float = 0.05  # resubmit delay after worker failure
 
 
-class RequestRecord(NamedTuple):
-    t_submit: float
-    t_complete: float
-    func: int
-    worker: int
-    cold: bool
-    vu: int
-
-    @property
-    def latency_ms(self) -> float:
-        return (self.t_complete - self.t_submit) * 1e3
+# RequestRecord lives in core.records now; re-exported here for the legacy
+# import path (``from repro.core.simulator import RequestRecord``).
+__all__ = ["RequestRecord", "SimConfig", "Simulator"]
 
 
 # integer event kinds; the *push order* (and with it the tie-breaking
@@ -231,8 +234,13 @@ class Simulator:
         self._heap: List[Tuple[float, int, int, tuple]] = []
         self._seq = itertools.count()
         self.t = 0.0
-        self.records: List[RequestRecord] = []
-        self.assignments: List[Tuple[float, int]] = []  # (t, worker)
+        # columnar accumulation; .records/.assignments are lazy list views
+        self._rec = RecordAccumulator()
+        self._rec_append = self._rec.append
+        self._rec_list: Optional[List[RequestRecord]] = None
+        self._asg_t: List[float] = []
+        self._asg_w: List[int] = []
+        self._asg_list: Optional[List[Tuple[float, int]]] = None
         self._failures: List[Tuple[float, int]] = []
         self._additions: List[Tuple[float, int]] = []
         self.n_events = 0  # heap events processed (bench_sim_speed)
@@ -241,6 +249,34 @@ class Simulator:
         self._fmem = [f.mem_mb for f in self.funcs]
         self._fcold = [f.cold_ms for f in self.funcs]
         self._fwarm = [f.warm_ms for f in self.funcs]
+
+    # ------------------------------------------------------------ views
+    @property
+    def records(self) -> List[RequestRecord]:
+        """Legacy list-of-``RequestRecord`` view (materialized, cached)."""
+        if self._rec_list is None or len(self._rec_list) != len(self._rec):
+            self._rec_list = self._rec.to_records()
+        return self._rec_list
+
+    @property
+    def record_columns(self) -> RecordColumns:
+        """The record stream as numpy columns (no per-record objects)."""
+        return self._rec.columns()
+
+    @property
+    def assignments(self) -> List[Tuple[float, int]]:
+        """Legacy ``[(t, worker), ...]`` view (materialized, cached)."""
+        if self._asg_list is None or len(self._asg_list) != len(self._asg_t):
+            self._asg_list = list(zip(self._asg_t, self._asg_w))
+        return self._asg_list
+
+    @property
+    def assignment_columns(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Assignment trace as ``(t float64[], worker int64[])`` columns."""
+        return (
+            np.asarray(self._asg_t, np.float64),
+            np.asarray(self._asg_w, np.int64),
+        )
 
     # ------------------------------------------------------------- events
     def _push(self, t: float, kind: int, payload: tuple = ()) -> None:
@@ -281,6 +317,27 @@ class Simulator:
         programs: Optional[List[VUProgram]] = None,
         t_start: float = 0.0,
     ) -> List[RequestRecord]:
+        for _ in self.run_iter(n_vus, duration_s, programs, t_start):
+            pass
+        return self.records
+
+    def run_iter(
+        self,
+        n_vus: int = 20,
+        duration_s: float = 100.0,
+        programs: Optional[List[VUProgram]] = None,
+        t_start: float = 0.0,
+        yield_every: int = 4096,
+    ) -> Iterator[int]:
+        """Generator form of :meth:`run`: identical event semantics, but
+        yields the running processed-event count every ``yield_every``
+        events so multiple simulators can be interleaved cooperatively in
+        one process (the sharded driver's ``interleaved`` backend).
+
+        ``run`` is exactly ``drain(run_iter(...))`` — there is ONE event
+        loop, so the byte-for-byte replay contract with tests/legacy covers
+        both entry points.
+        """
         cfg = self.cfg
         if programs is None:
             # generous upper bound on events per VU
@@ -306,26 +363,31 @@ class Simulator:
         pop = heapq.heappop
         deadline = self._deadline
         n = 0
-        while heap:
-            t, _, kind, payload = pop(heap)
-            if t > deadline:
-                break
-            self.t = t
-            n += 1
-            if kind == _SUBMIT:
-                self._ev_submit(payload[0])
-            elif kind == _COMPLETE:
-                self._ev_complete(payload[0], payload[1])
-            elif kind == _RESUBMIT:
-                self._dispatch(payload[0])
-            elif kind == _SWEEP:
-                self._ev_sweep()
-            elif kind == _FAIL:
-                self._ev_fail(payload[0])
-            else:
-                self._ev_add_worker(payload[0])
-        self.n_events += n
-        return self.records
+        try:
+            while heap:
+                t, _, kind, payload = pop(heap)
+                if t > deadline:
+                    break
+                self.t = t
+                n += 1
+                if kind == _SUBMIT:
+                    self._ev_submit(payload[0])
+                elif kind == _COMPLETE:
+                    self._ev_complete(payload[0], payload[1])
+                elif kind == _RESUBMIT:
+                    self._dispatch(payload[0])
+                elif kind == _SWEEP:
+                    self._ev_sweep()
+                elif kind == _FAIL:
+                    self._ev_fail(payload[0])
+                else:
+                    self._ev_add_worker(payload[0])
+                if not n % yield_every:
+                    yield n
+        finally:
+            # also runs on GeneratorExit, so a consumer that stops driving
+            # the generator early still gets the processed events accounted
+            self.n_events += n
 
     # ------------------------------------------------------------ handlers
     def _ev_submit(self, vu: int) -> None:
@@ -346,7 +408,8 @@ class Simulator:
             self._push(self.t + self.cfg.retry_delay_s, _RESUBMIT, (task,))
             return
         task.worker = w
-        self.assignments.append((self.t, w))
+        self._asg_t.append(self.t)
+        self._asg_w.append(w)
         self._start_or_queue(worker, task)
 
     def _start_or_queue(self, worker: _Worker, task: _Task) -> None:
@@ -425,9 +488,7 @@ class Simulator:
         worker.idle_mem_mb += mem
         self.sched.on_finish(worker.wid, self._fnames[func])
         t_done = t + self._overhead_s
-        self.records.append(
-            RequestRecord(task.t_submit, t_done, func, worker.wid, task.cold, task.vu)
-        )
+        self._rec_append(task.t_submit, t_done, func, worker.wid, task.cold, task.vu)
         # closed loop: VU thinks, then submits its next request
         sleeps = self._prog_sleeps[task.vu]
         ei = task.ev_idx

@@ -84,3 +84,37 @@ def test_byte_identical_service_times_are_request_identity_seeded():
 def test_byte_identical_at_scale():
     """100 workers / 500 VUs: the config class the refactor targets."""
     _assert_identical("hiku", seed=0, n_workers=100, n_vus=500, dur=10.0)
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("backend", ["interleaved", "process"])
+def test_kshard_streams_byte_identical_to_seed_engine(backend):
+    """Every shard of a K-shard run must replay byte-for-byte what the
+    FROZEN seed engine produces for that shard's slice (same seed, worker
+    count, VU count, duration).  The seed baseline is tests/legacy and is
+    never regenerated — this extends the PR-1 contract to the sharded
+    driver on both execution backends."""
+    import dataclasses
+
+    from repro.core.shard import ShardedSimulator
+
+    driver = ShardedSimulator(3, 9, scheduler="hiku", seed=5, backend=backend)
+    merged = driver.run(n_vus=18, duration_s=25.0)
+    assert len(merged.records) > 0
+    for res in merged.shards:
+        spec = res.spec
+        lsched = legacy_make_scheduler(spec.scheduler, spec.cfg.n_workers, seed=spec.seed)
+        lsim = LegacySimulator(
+            lsched, cfg=LegacySimConfig(**dataclasses.asdict(spec.cfg)), seed=spec.seed
+        )
+        lrecs = lsim.run(n_vus=spec.n_vus, duration_s=spec.duration_s)
+        cols = res.records
+        assert len(lrecs) == len(cols) > 0, f"shard {spec.index}"
+        got = list(
+            zip(cols.t_submit.tolist(), cols.t_done.tolist(), cols.func.tolist(),
+                cols.worker.tolist(), cols.cold.tolist(), cols.vu.tolist())
+        )
+        want = [(r.t_submit, r.t_complete, r.func, r.worker, r.cold, r.vu) for r in lrecs]
+        assert got == want, f"shard {spec.index} diverged from the seed engine"
+        got_asg = list(zip(res.assign_t.tolist(), res.assign_w.tolist()))
+        assert got_asg == [(t, w) for t, w in lsim.assignments], f"shard {spec.index}"

@@ -65,6 +65,51 @@ def test_state_reset_fallback_matches_fresh_generator():
         assert got == want
 
 
+def test_selftest_failure_warns_once_and_stays_bit_exact(monkeypatch):
+    """A degraded environment (self-test mismatch, e.g. a numpy whose
+    default_rng stream differs from the learned tables) must fall back to
+    per-tuple draws — bit-exact — and emit exactly ONE warning, not one per
+    call."""
+    import warnings
+
+    monkeypatch.setattr(fastrng, "_SELFTEST_OK", False)
+    monkeypatch.setattr(fastrng, "_FALLBACK_WARNED", False)
+    mean, sigma = -0.03125, 0.25
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got1 = fastrng.lognormal_matrix(11, 3, 16, mean, sigma)
+        got2 = fastrng.lognormal_matrix(12, 4, 8, mean, sigma)
+    fallback_warnings = [w for w in caught if "fastrng fast path disabled" in str(w.message)]
+    assert len(fallback_warnings) == 1
+    assert issubclass(fallback_warnings[0].category, RuntimeWarning)
+    assert np.array_equal(got1, _reference(11, 3, 16, mean, sigma))
+    assert np.array_equal(got2, _reference(12, 4, 8, mean, sigma))
+
+
+def test_fast_path_emits_no_fallback_warning():
+    import warnings
+
+    assert fastrng.selftest()  # healthy stream on this numpy
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        fastrng.lognormal_matrix(3, 2, 16, -0.03125, 0.25)
+    assert not [w for w in caught if "fastrng" in str(w.message)]
+
+
+def test_unlearned_tables_fallback_bit_exact(monkeypatch):
+    """Regression pin for a numpy stream the learned ziggurat tables do not
+    cover (tables are numpy-stream-specific): with every strip marked
+    unusable, *all* draws must take the per-element state-reset fallback
+    and still be bit-identical to fresh default_rng draws."""
+    wi, ki, usable = fastrng._load_tables()
+    monkeypatch.setattr(
+        fastrng, "_TABLES", (wi, ki, np.zeros_like(usable))
+    )
+    mean, sigma = -0.5 * 0.25**2, 0.25
+    got = fastrng.lognormal_matrix(99, 5, 40, mean, sigma)
+    assert np.array_equal(got, _reference(99, 5, 40, mean, sigma))
+
+
 @pytest.mark.slow
 def test_bit_exact_large_sample():
     """Broad sweep: ~20k draws covering all ziggurat strips + rejection paths."""

@@ -1,0 +1,186 @@
+"""Columnar record store: lossless round-trips, merge primitives, and
+float-exact parity between the legacy list metrics path and the columnar
+path (tolerance 0 — the vectorized expressions must be the same IEEE ops)."""
+
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, Simulator, make_scheduler
+from repro.core.metrics import latency_cdf, load_cv_per_second, summarize
+from repro.core.records import (
+    REC_DTYPE,
+    RecordAccumulator,
+    RecordColumns,
+    RequestRecord,
+)
+
+
+@pytest.fixture(scope="module")
+def sim_run():
+    sched = make_scheduler("hiku", 5, seed=17)
+    sim = Simulator(sched, cfg=SimConfig(mem_pool_mb=1024.0), seed=17)
+    recs = sim.run(n_vus=25, duration_s=30.0)
+    assert len(recs) > 100
+    return sim, recs
+
+
+def test_round_trip_records_columns_records(sim_run):
+    _, recs = sim_run
+    cols = RecordColumns.from_records(recs)
+    back = cols.to_records()
+    assert back == recs  # NamedTuple equality: every field bit-identical
+    assert all(isinstance(r, RequestRecord) for r in back)
+    assert all(isinstance(r.cold, bool) for r in back)
+
+
+def test_accumulator_is_the_simulator_store(sim_run):
+    sim, recs = sim_run
+    cols = sim.record_columns
+    assert len(cols) == len(recs)
+    assert cols.to_records() == recs
+    assert sim.records is sim.records  # cached materialization
+
+
+def test_column_dtypes_and_structured_view(sim_run):
+    sim, recs = sim_run
+    cols = sim.record_columns
+    assert cols.t_submit.dtype == np.float64
+    assert cols.t_done.dtype == np.float64
+    assert cols.func.dtype == np.int32
+    assert cols.worker.dtype == np.int32
+    assert cols.cold.dtype == np.bool_
+    assert cols.vu.dtype == np.int32
+    packed = cols.as_structured()
+    assert packed.dtype == REC_DTYPE and len(packed) == len(cols)
+    assert RecordColumns.from_structured(packed).equals(cols)
+
+
+def test_concat_take_remap_getitem(sim_run):
+    _, recs = sim_run
+    cols = RecordColumns.from_records(recs)
+    a, b = cols[: len(cols) // 2], cols[len(cols) // 2 :]
+    cat = RecordColumns.concat([a, b])
+    assert cat.equals(cols)
+    rev = cols.take(np.arange(len(cols))[::-1])
+    assert rev[0] == recs[-1] and rev[-1] == recs[0]
+    shifted = cols.remap(worker_offset=100, vu_offset=1000)
+    assert np.array_equal(shifted.worker, cols.worker + 100)
+    assert np.array_equal(shifted.vu, cols.vu + 1000)
+    assert np.array_equal(shifted.t_submit, cols.t_submit)
+    assert cols.remap() is cols  # no-op fast path
+    assert cols[3] == recs[3]
+    assert list(cols[:2]) == recs[:2]
+
+
+def test_empty_store():
+    empty = RecordColumns.empty()
+    assert len(empty) == 0 and empty.to_records() == []
+    assert RecordColumns.from_records([]).equals(empty)
+    assert RecordColumns.concat([]).equals(empty)
+    acc = RecordAccumulator()
+    assert len(acc) == 0 and acc.columns().equals(empty)
+
+
+def test_mismatched_column_lengths_rejected():
+    with pytest.raises(ValueError):
+        RecordColumns([0.0, 1.0], [1.0], [0], [0], [False], [0])
+
+
+def test_accumulator_append_and_clear():
+    acc = RecordAccumulator()
+    acc.append(0.5, 1.5, 3, 2, True, 7)
+    acc.append(0.6, 1.1, 1, 0, False, 4)
+    assert len(acc) == 2
+    assert acc.to_records() == [
+        RequestRecord(0.5, 1.5, 3, 2, True, 7),
+        RequestRecord(0.6, 1.1, 1, 0, False, 4),
+    ]
+    assert acc.columns().to_records() == acc.to_records()
+    acc.clear()
+    assert len(acc) == 0
+
+
+def test_latency_vector_matches_row_property(sim_run):
+    _, recs = sim_run
+    cols = RecordColumns.from_records(recs)
+    want = np.array([r.latency_ms for r in recs])
+    assert np.array_equal(cols.latency_ms, want)
+
+
+# ------------------------------------------------------- metrics parity
+def test_summarize_list_vs_columnar_tolerance_zero(sim_run):
+    sim, recs = sim_run
+    m_list = summarize(recs, sim.assignments, list(range(5)), 30.0)
+    m_cols = summarize(sim.record_columns, sim.assignment_columns, list(range(5)), 30.0)
+    assert m_list == m_cols  # dataclass equality: float-exact
+
+
+def test_latency_cdf_list_vs_columnar(sim_run):
+    sim, recs = sim_run
+    x1, y1 = latency_cdf(recs)
+    x2, y2 = latency_cdf(sim.record_columns)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+
+
+def test_load_cv_matches_python_loop_reference(sim_run):
+    """The vectorized bincount must reproduce the seed implementation's
+    per-assignment Python loop bit-for-bit."""
+    sim, _ = sim_run
+    assignments = sim.assignments
+    workers, t_end = list(range(5)), 30.0
+
+    # reference: the pre-columnar implementation, verbatim
+    n_bins = int(np.ceil(t_end)) + 1
+    wid_index = {w: i for i, w in enumerate(workers)}
+    counts = np.zeros((n_bins, len(workers)))
+    for t, w in assignments:
+        if w in wid_index:
+            counts[min(int(t), n_bins - 1), wid_index[w]] += 1
+    active = counts.sum(axis=1) > 0
+    counts = counts[active]
+    mean = counts.mean(axis=1)
+    std = counts.std(axis=1)
+    want = np.where(mean > 0, std / np.maximum(mean, 1e-12), 0.0)
+
+    got_list = load_cv_per_second(assignments, workers, t_end)
+    got_cols = load_cv_per_second(sim.assignment_columns, workers, t_end)
+    assert np.array_equal(got_list, want)
+    assert np.array_equal(got_cols, want)
+
+
+def test_load_cv_ignores_unknown_workers(sim_run):
+    """Assignments to workers outside the metric's worker set are dropped,
+    exactly like the legacy dict-membership test did."""
+    sim, _ = sim_run
+    sub = [0, 2, 4]
+    got = load_cv_per_second(sim.assignments, sub, 30.0)
+    n_bins = int(np.ceil(30.0)) + 1
+    wid_index = {w: i for i, w in enumerate(sub)}
+    counts = np.zeros((n_bins, len(sub)))
+    for t, w in sim.assignments:
+        if w in wid_index:
+            counts[min(int(t), n_bins - 1), wid_index[w]] += 1
+    counts = counts[counts.sum(axis=1) > 0]
+    mean, std = counts.mean(axis=1), counts.std(axis=1)
+    want = np.where(mean > 0, std / np.maximum(mean, 1e-12), 0.0)
+    assert np.array_equal(got, want)
+
+
+def test_load_cv_accepts_plain_list_columns(sim_run):
+    sim, _ = sim_run
+    at, aw = sim.assignment_columns
+    want = load_cv_per_second((at, aw), list(range(5)), 30.0)
+    got = load_cv_per_second((at.tolist(), aw.tolist()), list(range(5)), 30.0)
+    assert np.array_equal(got, want)
+
+
+def test_load_cv_rejects_mismatched_columns():
+    with pytest.raises(ValueError):
+        load_cv_per_second((np.zeros(3), np.zeros(2, np.int64)), [0, 1], 5.0)
+
+
+def test_summarize_empty_records_keeps_seed_semantics():
+    m = summarize([], [], [0, 1], 10.0)
+    assert m.n_requests == 0
+    assert m.mean_latency_ms == 0.0 and m.cold_rate == 0.0
+    assert m.load_cv == 0.0 and m.throughput_rps == 0.0

@@ -1,0 +1,95 @@
+"""Hypothesis property tests for the columnar record store.
+
+Round-trip ``records <-> columns`` must preserve order, dtype, and every
+flag bit-exactly, and the metrics must agree between the legacy list path
+and the columnar path at float64 tolerance 0, for *arbitrary* record
+streams — not just ones the simulator happens to emit.
+
+Separate module so environments without hypothesis still run the
+deterministic columnar tests in test_records.py (this module skips there).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip only the property tests
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.metrics import latency_cdf, load_cv_per_second, summarize  # noqa: E402
+from repro.core.records import RecordColumns, RequestRecord  # noqa: E402
+
+_times = st.floats(
+    min_value=0.0, max_value=1e6, allow_nan=False, allow_infinity=False, width=64
+)
+
+_records = st.lists(
+    st.builds(
+        RequestRecord,
+        t_submit=_times,
+        t_complete=_times,
+        func=st.integers(0, 63),
+        worker=st.integers(0, 99),
+        cold=st.booleans(),
+        vu=st.integers(0, 499),
+    ),
+    max_size=200,
+)
+
+_assignments = st.lists(
+    st.tuples(st.floats(min_value=0.0, max_value=99.0, allow_nan=False), st.integers(0, 9)),
+    max_size=200,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(records=_records)
+def test_round_trip_preserves_order_dtype_and_flags(records):
+    cols = RecordColumns.from_records(records)
+    assert len(cols) == len(records)
+    assert cols.t_submit.dtype == np.float64 and cols.cold.dtype == np.bool_
+    back = cols.to_records()
+    assert back == records  # bit-exact fields, identical order
+    assert [r.cold for r in back] == [r.cold for r in records]
+    # structured pack/unpack is equally lossless
+    assert RecordColumns.from_structured(cols.as_structured()).to_records() == records
+
+
+@settings(max_examples=60, deadline=None)
+@given(records=_records, assignments=_assignments, duration=st.floats(1.0, 500.0))
+def test_summarize_list_vs_columnar_tolerance_zero(records, assignments, duration):
+    workers = list(range(10))
+    m_list = summarize(records, assignments, workers, duration)
+    cols = RecordColumns.from_records(records)
+    at = np.array([t for t, _ in assignments], np.float64)
+    aw = np.array([w for _, w in assignments], np.int64)
+    m_cols = summarize(cols, (at, aw), workers, duration)
+    assert m_list == m_cols  # dataclass equality: every float identical
+
+
+@settings(max_examples=40, deadline=None)
+@given(records=_records.filter(len))
+def test_latency_cdf_list_vs_columnar(records):
+    x1, y1 = latency_cdf(records)
+    x2, y2 = latency_cdf(RecordColumns.from_records(records))
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(assignments=_assignments, t_end=st.floats(1.0, 200.0))
+def test_load_cv_list_vs_columnar(assignments, t_end):
+    workers = list(range(10))
+    got_list = load_cv_per_second(assignments, workers, t_end)
+    at = np.array([t for t, _ in assignments], np.float64)
+    aw = np.array([w for _, w in assignments], np.int64)
+    got_cols = load_cv_per_second((at, aw), workers, t_end)
+    assert np.array_equal(got_list, got_cols)
+
+
+@settings(max_examples=40, deadline=None)
+@given(records=_records, split=st.integers(0, 200))
+def test_concat_of_split_is_identity(records, split):
+    cols = RecordColumns.from_records(records)
+    split = min(split, len(cols))
+    again = RecordColumns.concat([cols[:split], cols[split:]])
+    assert again.equals(cols)

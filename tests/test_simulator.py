@@ -68,6 +68,25 @@ def test_paper_ordering_cold_starts_and_latency():
     assert res["hiku"].n_requests > res["random"].n_requests  # throughput
 
 
+def test_run_iter_matches_run_and_counts_events_on_early_stop():
+    """run == drain(run_iter), and abandoning the generator early still
+    accounts the events actually processed."""
+    _, want = _run("hiku", seed=3, vus=15, dur=20.0)
+    sched = make_scheduler("hiku", 5, seed=3)
+    sim = Simulator(sched, seed=3)
+    for _ in sim.run_iter(n_vus=15, duration_s=20.0, yield_every=64):
+        pass
+    assert sim.records == want
+    full_events = sim.n_events
+
+    sched2 = make_scheduler("hiku", 5, seed=3)
+    sim2 = Simulator(sched2, seed=3)
+    for n in sim2.run_iter(n_vus=15, duration_s=20.0, yield_every=64):
+        if n >= 128:
+            break
+    assert 128 <= sim2.n_events < full_events
+
+
 def test_worker_failure_and_elastic_join():
     sched = make_scheduler("hiku", 5, seed=1)
     sim = Simulator(sched, seed=1)

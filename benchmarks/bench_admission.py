@@ -1,0 +1,142 @@
+"""Global pull-based admission tier vs static K-shard partitioning.
+
+Scenarios the static partition can't balance (see core/admission.py):
+
+* ``skewed`` — a contiguous hot block of VUs (near-zero think time, heavy
+  functions) that ``ShardedSimulator``'s contiguous VU split concentrates on
+  the first shard(s), run under memory pressure so the hot shard also
+  thrashes cold starts.  Static partitioning (``backend="process"``, the
+  scale-out default) vs the pull-based admission tier, same global VU
+  programs, reporting cross-shard load CV, p99 and cold rate.
+* ``burst`` — arrival waves of mixed hot/cold VUs (admission-time skew).
+  Pull admission vs the arrival-capable naive baseline (``round_robin``
+  binding on arrival), pull reacting to live per-shard pressure.
+
+Acceptance (pinned by tests/test_admission.py): pull admission beats the
+static partition on cross-shard load CV under the skewed scenario while the
+static path stays byte-identical to the frozen seed engine.
+"""
+
+from __future__ import annotations
+
+import time
+
+FULL = dict(n_shards=4, n_workers=32, n_vus=96, duration_s=40.0, mem_pool_mb=1024.0)
+QUICK = dict(n_shards=2, n_workers=8, n_vus=24, duration_s=10.0, mem_pool_mb=1024.0)
+
+
+def _fmt(shard_counts, metrics, extra: str = "") -> str:
+    from repro.core.admission import load_cv_across_shards
+
+    cv = load_cv_across_shards(shard_counts)
+    s = (
+        f"shard_cv={cv:.3f};p99_ms={metrics.p99_ms:.0f};"
+        f"mean_ms={metrics.mean_latency_ms:.0f};cold={metrics.cold_rate:.3f};"
+        f"worker_cv={metrics.load_cv:.2f};requests={metrics.n_requests}"
+    )
+    return s + (";" + extra if extra else "")
+
+
+def run(quick: bool = False):
+    import numpy as np
+
+    from repro.core import SimConfig, default_n_events
+    from repro.core.admission import (
+        AdmissionConfig,
+        AdmissionSimulator,
+        load_cv_across_shards,
+        make_skewed_programs,
+    )
+    from repro.core.shard import ShardedSimulator
+
+    from .common import save_json
+
+    p = QUICK if quick else FULL
+    K, W, VUS, DUR = p["n_shards"], p["n_workers"], p["n_vus"], p["duration_s"]
+    cfg = SimConfig(mem_pool_mb=p["mem_pool_mb"])
+    seed = 0
+    rows = []
+    payload = {"params": p}
+
+    # ---------------------------------------------------- skewed hot block
+    adm = AdmissionSimulator(K, W, scheduler="hiku", cfg=cfg, seed=seed)
+    n_events = default_n_events(DUR)
+    programs = make_skewed_programs(adm.funcs, VUS, n_events, seed, hot_frac=0.25)
+
+    t0 = time.perf_counter()
+    static = ShardedSimulator(K, W, scheduler="hiku", cfg=cfg, seed=seed,
+                              backend="process").run(VUS, DUR, programs=programs)
+    wall_static = time.perf_counter() - t0
+    m_static = static.summarize(DUR)
+    static_counts = [len(r.records) for r in static.shards]
+
+    t0 = time.perf_counter()
+    pull = adm.run(VUS, DUR, programs=programs)
+    wall_pull = time.perf_counter() - t0
+    m_pull = pull.summarize(DUR)
+    pull_counts = pull.shard_requests.tolist()
+
+    cv_static = load_cv_across_shards(static_counts)
+    cv_pull = load_cv_across_shards(pull_counts)
+    rows.append(
+        (
+            "admission/skewed/static_process",
+            wall_static / max(m_static.n_requests, 1) * 1e6,
+            _fmt(static_counts, m_static),
+        )
+    )
+    rows.append(
+        (
+            "admission/skewed/pull",
+            wall_pull / max(m_pull.n_requests, 1) * 1e6,
+            _fmt(pull_counts, m_pull,
+                 extra=f"cv_vs_static={cv_pull / max(cv_static, 1e-9):.3f}x;"
+                       f"admitted={pull.admitted}"),
+        )
+    )
+    payload["skewed"] = {
+        "static": {"shard_requests": static_counts, "cv": cv_static,
+                   "p99_ms": m_static.p99_ms, "cold_rate": m_static.cold_rate},
+        "pull": {"shard_requests": pull_counts, "cv": cv_pull,
+                 "p99_ms": m_pull.p99_ms, "cold_rate": m_pull.cold_rate,
+                 "pulls": [s.pulls for s in pull.shards]},
+    }
+
+    # ------------------------------------------------------- arrival waves
+    n_waves = 2 if quick else 4
+    wave_gap = DUR / (n_waves + 1)
+    arrivals = np.asarray([(vu % n_waves) * wave_gap for vu in range(VUS)])
+    wave_progs = make_skewed_programs(adm.funcs, VUS, n_events, seed + 1, hot_frac=0.5)
+    results = {}
+    for policy in ("round_robin", "pull"):
+        drv = AdmissionSimulator(
+            K, W, scheduler="hiku", cfg=cfg, seed=seed,
+            admission=AdmissionConfig(policy=policy),
+        )
+        t0 = time.perf_counter()
+        r = drv.run(VUS, DUR, programs=wave_progs, arrivals=arrivals)
+        wall = time.perf_counter() - t0
+        m = r.summarize(DUR)
+        results[policy] = r
+        rows.append(
+            (
+                f"admission/burst/{policy}",
+                wall / max(m.n_requests, 1) * 1e6,
+                _fmt(r.shard_requests.tolist(), m,
+                     extra=f"peak_queue={int(r.queue_depth.max(initial=0))};"
+                           f"admitted={r.admitted}"),
+            )
+        )
+    payload["burst"] = {
+        pol: {"shard_requests": results[pol].shard_requests.tolist(),
+              "cv": results[pol].shard_load_cv,
+              "admitted": results[pol].admitted}
+        for pol in results
+    }
+    save_json("admission", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

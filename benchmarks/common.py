@@ -10,6 +10,14 @@ Per-seed workloads (VU programs and service-time fluctuation bands) are
 memoized inside core.trace / core.simulator, so the four schedulers replay
 the same generated workload instead of regenerating it per cell; matrix wall
 time is tracked by benchmarks/bench_sim_speed.py.
+
+Results JSONs are written to ``RESULTS_DIR`` — by default
+``benchmarks/results/local`` (gitignored), NOT the checked-in
+``benchmarks/results/`` baselines, so casual ``python -m benchmarks.run``
+invocations never churn files under version control.  Pass
+``--results-dir benchmarks/results`` (or call :func:`set_results_dir`) to
+deliberately refresh the checked-in results; see docs/BENCHMARKS.md for the
+same-machine semantics of those baselines.
 """
 
 from __future__ import annotations
@@ -28,7 +36,17 @@ SCHEDULERS = ["hiku", "ch_bl", "least_connections", "random"]  # paper's four
 EXTRA_SCHEDULERS = ["ch", "rj_ch"]
 VU_LEVELS = [20, 50, 100]
 
-RESULTS_DIR = Path(__file__).parent / "results"
+#: checked-in baselines (read-only by convention; see module docstring)
+CHECKED_IN_RESULTS = Path(__file__).parent / "results"
+#: where save_json writes — defaults to a gitignored scratch dir
+RESULTS_DIR = CHECKED_IN_RESULTS / "local"
+
+
+def set_results_dir(path) -> Path:
+    """Redirect ``save_json`` output (the ``--results-dir`` hook)."""
+    global RESULTS_DIR
+    RESULTS_DIR = Path(path)
+    return RESULTS_DIR
 
 
 def run_matrix(

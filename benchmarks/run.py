@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (per repo convention).
 ``--quick`` shrinks the simulation matrix for CI.  Full results are also
-persisted as JSON under benchmarks/results/.
+persisted as JSON under ``--results-dir`` (default: benchmarks/results/local,
+which is gitignored — the checked-in baselines under benchmarks/results/ are
+only rewritten when you pass that directory explicitly; see
+docs/BENCHMARKS.md).
 """
 
 from __future__ import annotations
@@ -16,9 +19,17 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, help="comma list of bench names")
+    ap.add_argument(
+        "--results-dir",
+        default=None,
+        help="where bench modules persist their JSON results (default: "
+        "benchmarks/results/local, so default runs never churn the "
+        "checked-in baselines; pass benchmarks/results to refresh them)",
+    )
     args = ap.parse_args(argv)
 
     from . import (
+        bench_admission,
         bench_coldstart,
         bench_concurrency,
         bench_imbalance,
@@ -31,7 +42,11 @@ def main(argv=None) -> None:
         bench_table1,
         bench_trace,
         bench_throughput,
+        common,
     )
+
+    if args.results_dir:
+        common.set_results_dir(args.results_dir)
 
     modules = {
         "table1": bench_table1,
@@ -46,6 +61,7 @@ def main(argv=None) -> None:
         "pull_dispatch": bench_pull_dispatch,
         "sim_speed": bench_sim_speed,
         "shard_scale": bench_shard_scale,
+        "admission": bench_admission,
     }
     if args.only:
         keep = set(args.only.split(","))

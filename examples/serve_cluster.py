@@ -4,9 +4,11 @@ Replays the paper's evaluation protocol — 5 workers, 40 Azure-weighted
 functions, closed-loop VUs at 20/50/100, seeded identical workloads per
 scheduler — through the cluster simulator, scales the same protocol out
 across K independent cluster shards via the sharded multi-cluster driver,
-then serves a *real* small model with batched requests through the engine
-under the same scheduler, including a worker failure + elastic re-join
-mid-run.
+demonstrates the global pull-based admission tier balancing a skewed VU
+population the static partition can't (with windowed metrics streaming off
+the in-flight merge), then serves a *real* small model with batched
+requests through the engine under the same scheduler, including a worker
+failure + elastic re-join mid-run.
 
     PYTHONPATH=src python examples/serve_cluster.py [--quick] [--shards K]
 """
@@ -18,7 +20,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import ShardedSimulator, SimConfig, Simulator, make_scheduler, summarize
+from repro.core import (
+    ShardedSimulator,
+    SimConfig,
+    Simulator,
+    default_n_events,
+    make_scheduler,
+    summarize,
+)
 from repro.serving import Endpoint, ServingEngine
 
 
@@ -64,6 +73,49 @@ def sharded_scale_out(quick: bool, n_shards: int):
           f"aggregate capacity {run.aggregate_events_per_s:,.0f} ev/s")
 
 
+def admission_tier(quick: bool, n_shards: int):
+    from repro.core import summarize_window
+    from repro.core.admission import (
+        AdmissionSimulator,
+        load_cv_across_shards,
+        make_skewed_programs,
+    )
+
+    n_workers, n_vus, dur = (16, 32, 10.0) if quick else (32, 96, 30.0)
+    n_shards = min(n_shards, n_workers)
+    print(f"\n== global pull-based admission tier: {n_shards} shards, "
+          f"{n_workers} workers, {n_vus} VUs (25% hot block), {dur:.0f}s ==")
+    cfg = SimConfig(mem_pool_mb=1024.0)
+    adm = AdmissionSimulator(n_shards, n_workers, scheduler="hiku", cfg=cfg, seed=7)
+    programs = make_skewed_programs(adm.funcs, n_vus, default_n_events(dur), 7)
+
+    static = ShardedSimulator(n_shards, n_workers, scheduler="hiku", cfg=cfg,
+                              seed=7, backend="auto").run(n_vus, dur, programs=programs)
+    pull = adm.run(n_vus, dur, programs=programs)
+    s_counts = [len(r.records) for r in static.shards]
+    p_counts = pull.shard_requests.tolist()
+    print(f"  static partition: per-shard requests {s_counts} "
+          f"(cross-shard CV {load_cv_across_shards(s_counts):.2f}), "
+          f"p99 {static.summarize(dur).p99_ms:.0f} ms")
+    print(f"  pull admission:   per-shard requests {p_counts} "
+          f"(cross-shard CV {pull.shard_load_cv:.2f}), "
+          f"p99 {pull.summarize(dur).p99_ms:.0f} ms, "
+          f"pulls {[s.pulls for s in pull.shards]}")
+
+    # windowed metrics over the *in-flight* sharded run (streaming merge)
+    window_s = 2.0 if quick else 5.0
+    stream = ShardedSimulator(n_shards, n_workers, scheduler="hiku", cfg=cfg,
+                              seed=7, backend="interleaved")
+    print(f"  live {window_s:.0f}s windows (streaming merge, static partition):")
+    for chunk in stream.run_stream(n_vus, dur, window_s=window_s, programs=programs):
+        m = summarize_window(chunk.records, (chunk.assign_t, chunk.assign_w),
+                             list(range(n_workers)), chunk.t_lo, chunk.t_hi)
+        if m.n_requests:
+            print(f"    ({chunk.t_lo:5.1f}, {chunk.t_hi:5.1f}]s: "
+                  f"{m.n_requests:4d} reqs, p99 {m.p99_ms:6.0f} ms, "
+                  f"cold {m.cold_rate:5.1%}, per-shard {chunk.shard_counts.tolist()}")
+
+
 def serve_real_batched(quick: bool):
     print("\n== real-model serving with batched requests + failure/elastic ==")
     cfg = get_config("minicpm_2b").reduced()
@@ -97,4 +149,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     replay_paper_protocol(args.quick)
     sharded_scale_out(args.quick, args.shards)
+    admission_tier(args.quick, args.shards)
     serve_real_batched(args.quick)

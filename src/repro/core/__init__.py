@@ -1,7 +1,34 @@
-"""Core contribution of the paper: pull-based (Join-Idle-Queue) scheduling."""
+"""Core contribution of the paper: pull-based (Join-Idle-Queue) scheduling.
+
+The exported surface, grouped by layer (docs/ARCHITECTURE.md is the
+end-to-end tour; each symbol's docstring states which contracts bind it):
+
+* schedulers — ``Scheduler`` (callback protocol), ``HikuScheduler``
+  (Algorithm 1), ``make_scheduler``/``available_schedulers`` (registry);
+* engine — ``Simulator`` + ``SimConfig`` (the bit-exact event loop),
+  ``FunctionSpec``/``make_functions``/``make_vu_programs`` (seeded
+  Azure-like workloads);
+* records/metrics — ``RequestRecord``/``RecordColumns``/
+  ``RecordAccumulator`` (columnar store), ``RunMetrics``/``summarize``/
+  ``summarize_window``/``summarize_windows``/``latency_cdf``/
+  ``load_cv_per_second`` (§V metrics, vectorized);
+* scale-out — ``ShardedSimulator``/``ShardSpec``/``ShardResult``/
+  ``MergedRun``/``StreamChunk``/``shard_seed`` (static K-shard partition +
+  batch/streaming merge), ``AdmissionSimulator``/``AdmissionConfig``/
+  ``AdmissionRun`` (global pull-based admission tier);
+* JAX form — ``JIQState``/``init_state``/``sched_step``/``sched_many``/
+  ``sched_many_fused`` + the ``ARRIVAL``/``FINISH``/``EVICT`` event kinds
+  (vectorized Algorithm 1, Pallas-fused on TPU).
+"""
 
 from . import baselines as _baselines  # noqa: F401  (registers schedulers)
 from . import hiku as _hiku  # noqa: F401
+from .admission import (
+    AdmissionConfig,
+    AdmissionRun,
+    AdmissionShard,
+    AdmissionSimulator,
+)
 from .hiku import HikuScheduler
 from .jax_sched import (
     ARRIVAL,
@@ -13,15 +40,33 @@ from .jax_sched import (
     sched_many_fused,
     sched_step,
 )
-from .metrics import RunMetrics, latency_cdf, load_cv_per_second, summarize
+from .metrics import (
+    RunMetrics,
+    latency_cdf,
+    load_cv_per_second,
+    summarize,
+    summarize_window,
+    summarize_windows,
+)
 from .records import RecordAccumulator, RecordColumns, RequestRecord
 from .scheduler import Scheduler, available_schedulers, make_scheduler
-from .shard import MergedRun, ShardedSimulator, ShardResult, ShardSpec, shard_seed
+from .shard import (
+    MergedRun,
+    ShardedSimulator,
+    ShardResult,
+    ShardSpec,
+    StreamChunk,
+    shard_seed,
+)
 from .simulator import SimConfig, Simulator
-from .trace import FunctionSpec, make_functions, make_vu_programs
+from .trace import FunctionSpec, default_n_events, make_functions, make_vu_programs
 
 __all__ = [
     "ARRIVAL",
+    "AdmissionConfig",
+    "AdmissionRun",
+    "AdmissionShard",
+    "AdmissionSimulator",
     "EVICT",
     "FINISH",
     "FunctionSpec",
@@ -38,10 +83,12 @@ __all__ = [
     "ShardedSimulator",
     "SimConfig",
     "Simulator",
+    "StreamChunk",
     "available_schedulers",
     "init_state",
     "latency_cdf",
     "load_cv_per_second",
+    "default_n_events",
     "make_functions",
     "make_scheduler",
     "make_vu_programs",
@@ -50,4 +97,6 @@ __all__ = [
     "sched_step",
     "shard_seed",
     "summarize",
+    "summarize_window",
+    "summarize_windows",
 ]

@@ -1,0 +1,425 @@
+"""Global pull-based admission tier: the paper's pull principle, one level up.
+
+Hiku decouples worker selection from task assignment *inside* one cluster:
+idle workers enqueue themselves in ``PQ_f`` and requests bind late to a
+ready worker.  The sharded driver (``core.shard``) stops that idea at the
+shard boundary — VUs are statically partitioned at plan time, so a bursty
+shard queues while its neighbor idles, exactly the imbalance pull-based
+scheduling eliminates within a cluster (the centralized-admission framing of
+Hermes and NOAH).
+
+This module closes the gap with a second, cluster-level instance of the pull
+principle:
+
+* all arrivals (closed-loop VUs, optionally with per-VU arrival times) enter
+  ONE global admission queue instead of being split at plan time;
+* each shard advertises its *local pressure* — queued arrivals per worker
+  plus busy-worker fraction (``Simulator.pressure``) — and **pulls** the
+  next arrival whenever its pressure sits below the admission watermark;
+* the admission tier is itself a priority queue of shards keyed by pressure
+  (``PQ_f`` at cluster granularity): the least-loaded shard pulls first,
+  and every pull raises that shard's effective pressure by ``1/n_workers``
+  until its event loop catches up, so one tick cannot flood a shard.
+
+Execution co-runs the K shard simulators in simulated-time lockstep
+(``Simulator.begin`` / ``step_until`` — the engine's backpressure hooks),
+admitting between time slices via ``Simulator.admit_vu``.  The merged output
+follows the shard merge contract: worker ids remapped by shard offsets,
+VU local ids mapped through the admission-order table, streams stable-merged
+by completion time with shard-index tie-break.
+
+The static partition (``ShardedSimulator``) remains the default and is
+byte-identical to the frozen seed engine; the admission tier is a new
+opt-in scenario with its own (still deterministic, still seeded) streams.
+``benchmarks/bench_admission.py`` measures both on skewed/bursty arrival
+populations the static partition cannot balance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from collections import deque
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .metrics import RunMetrics, summarize
+from .records import RecordColumns
+from .scheduler import make_scheduler
+from .shard import merge_assignments, merge_window, shard_seed, split_even
+from .simulator import SimConfig, Simulator
+from .trace import (
+    FunctionSpec,
+    VUProgram,
+    default_n_events,
+    make_functions,
+    make_vu_programs,
+)
+
+__all__ = [
+    "AdmissionConfig",
+    "AdmissionRun",
+    "AdmissionShard",
+    "AdmissionSimulator",
+    "load_cv_across_shards",
+    "make_skewed_programs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Admission-tier control knobs.
+
+    Attributes:
+        watermark: pressure threshold below which a shard pulls
+            (``Simulator.pressure`` units: 0 = idle, 1 = all workers busy,
+            >1 = queueing).  Each pull within a tick raises the shard's
+            effective pressure by ``1/n_workers``, so a single tick admits
+            at most ``watermark * n_workers`` VUs into an idle shard.
+        tick_s: admission-loop period in *simulated* seconds; shards are
+            stepped in lockstep between pulls, so this bounds how stale the
+            pressure signal can be.
+        batch_size: optional hard cap on VUs bound per shard per tick,
+            honored by both policies (None: ``pull`` is watermark-limited
+            only; ``round_robin`` drains the eligible queue each tick).
+        policy: ``"pull"`` (pressure-ordered, the tentpole) or
+            ``"round_robin"`` (bind each arrival to the next shard in
+            cyclic order immediately — the arrival-capable static baseline).
+    """
+
+    watermark: float = 0.75
+    tick_s: float = 0.25
+    batch_size: Optional[int] = None
+    policy: str = "pull"
+
+
+@dataclasses.dataclass
+class AdmissionShard:
+    """One shard's output under global admission (analog of ``ShardResult``).
+
+    ``records``/``assign_w`` carry *shard-local* ids; ``admitted`` is the
+    local->global VU id table (position = local id, value = global id, in
+    admission order)."""
+
+    index: int
+    seed: int
+    n_workers: int
+    worker_offset: int
+    admitted: np.ndarray  # global VU ids, admission order
+    admit_t: np.ndarray  # admission times (s), parallel to ``admitted``
+    pulls: int  # admission-tier pulls this shard performed
+    records: RecordColumns
+    assign_t: np.ndarray
+    assign_w: np.ndarray
+    n_events: int
+
+
+@dataclasses.dataclass
+class AdmissionRun:
+    """Merged output of a global-admission run (analog of ``MergedRun``)."""
+
+    shards: List[AdmissionShard]
+    records: RecordColumns  # global ids, stable-merged by completion time
+    assign_t: np.ndarray
+    assign_w: np.ndarray
+    workers: List[int]
+    n_events: int
+    wall_s: float
+    admitted: int  # VUs admitted across all shards
+    unadmitted: int  # VUs still waiting (or never eligible) at the deadline
+    queue_t: np.ndarray  # admission-queue depth telemetry: sample times (s)
+    queue_depth: np.ndarray  # eligible-but-unadmitted VUs at each sample
+
+    @property
+    def shard_requests(self) -> np.ndarray:
+        """Completed requests per shard — the cross-shard balance signal."""
+        return np.asarray([len(s.records) for s in self.shards], np.int64)
+
+    @property
+    def shard_load_cv(self) -> float:
+        """CV of completed requests across shards (0 = perfectly balanced)."""
+        return load_cv_across_shards(self.shard_requests)
+
+    def summarize(self, duration_s: float) -> RunMetrics:
+        return summarize(
+            self.records, (self.assign_t, self.assign_w), self.workers, duration_s
+        )
+
+
+def load_cv_across_shards(counts: Sequence[float]) -> float:
+    """Coefficient of variation of per-shard load (std/mean; 0 = balanced)."""
+    c = np.asarray(counts, np.float64)
+    if c.size == 0 or c.mean() <= 0:
+        return 0.0
+    return float(c.std() / c.mean())
+
+
+def make_skewed_programs(
+    funcs: Sequence[FunctionSpec],
+    n_vus: int,
+    n_events: int,
+    seed: int,
+    hot_frac: float = 0.25,
+    hot_think: Tuple[float, float] = (0.05, 0.15),
+    cold_think: Tuple[float, float] = (1.0, 3.0),
+) -> List[VUProgram]:
+    """A VU population with a contiguous *hot block* the static partition
+    cannot balance.
+
+    The first ``hot_frac`` of VUs are hot: near-zero think time and calls
+    drawn only from the heavier half of the function population (by warm
+    latency).  The rest are cold: long think times, Azure-weighted function
+    choice.  Because the block is contiguous, ``ShardedSimulator``'s
+    contiguous VU split lands (nearly) all hot VUs on the first shard(s),
+    while pressure-based admission spreads them by live load.  Deterministic
+    per ``(seed, vu)`` like ``make_vu_programs``.
+    """
+    warm = np.asarray([f.warm_ms for f in funcs])
+    heavy = np.flatnonzero(warm >= np.median(warm))
+    weights = np.asarray([f.weight for f in funcs])
+    weights = weights / weights.sum()
+    n_hot = int(round(hot_frac * n_vus))
+    programs = []
+    for vu in range(n_vus):
+        rng = np.random.default_rng((seed, vu))
+        if vu < n_hot:
+            idx = heavy[rng.integers(0, len(heavy), size=n_events)]
+            sleep = rng.uniform(*hot_think, size=n_events)
+        else:
+            idx = rng.choice(len(funcs), size=n_events, p=weights)
+            sleep = rng.uniform(*cold_think, size=n_events)
+        programs.append(VUProgram(np.asarray(idx), sleep))
+    return programs
+
+
+class AdmissionSimulator:
+    """K shard simulators behind ONE pull-based global admission queue.
+
+    Same worker partition and per-shard seeding contract as
+    ``ShardedSimulator`` (largest-remainder split, golden-ratio
+    ``shard_seed`` stride), but the VU population is *not* partitioned at
+    plan time: shards pull arrivals from the shared admission queue when
+    their local pressure drops below the watermark.  All shards serve one
+    shared function population (``make_functions(seed)``) so any VU can bind
+    to any shard.
+
+    Args:
+        n_shards: shard (independent cluster) count, >= 1.
+        n_workers: total workers, split evenly across shards.
+        scheduler: intra-shard scheduler name (``make_scheduler``).
+        cfg: per-shard config template; ``n_workers`` is rewritten per shard.
+        seed: global workload seed; shard ``k`` runs with
+            ``shard_seed(seed, k)``.
+        admission: :class:`AdmissionConfig` knobs.
+    """
+
+    def __init__(
+        self,
+        n_shards: int,
+        n_workers: int,
+        scheduler: str = "hiku",
+        cfg: Optional[SimConfig] = None,
+        seed: int = 0,
+        admission: Optional[AdmissionConfig] = None,
+    ):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if n_workers < n_shards:
+            raise ValueError("need at least one worker per shard")
+        self.n_shards = int(n_shards)
+        self.n_workers = int(n_workers)
+        self.scheduler = scheduler
+        self.cfg = cfg or SimConfig()
+        self.seed = int(seed)
+        self.admission = admission or AdmissionConfig()
+        if self.admission.policy not in ("pull", "round_robin"):
+            raise ValueError(f"unknown admission policy {self.admission.policy!r}")
+        if self.admission.tick_s <= 0:
+            raise ValueError("tick_s must be > 0")
+        if self.admission.batch_size is not None and self.admission.batch_size < 1:
+            raise ValueError("batch_size must be >= 1 (or None for uncapped)")
+        self.worker_split = split_even(self.n_workers, self.n_shards)
+        self.worker_offsets = [0]
+        for n in self.worker_split:
+            self.worker_offsets.append(self.worker_offsets[-1] + n)
+        self.funcs = make_functions(seed=self.seed)
+
+    # ----------------------------------------------------------------- run
+    def run(
+        self,
+        n_vus: int = 20,
+        duration_s: float = 100.0,
+        programs: Optional[Sequence[VUProgram]] = None,
+        arrivals: Optional[Sequence[float]] = None,
+    ) -> AdmissionRun:
+        """Co-run the K shards under the global admission queue.
+
+        Args:
+            n_vus: global VU population size.
+            duration_s: simulated experiment length, seconds.
+            programs: explicit VU programs (len == ``n_vus``); default
+                generates the seeded Azure-like workload over the shared
+                function population.
+            arrivals: per-VU admission-eligibility times, seconds (default:
+                all eligible at t=0).  Admission happens only at tick
+                boundaries ``i * tick_s`` strictly below ``duration_s``, and
+                a VU is admissible at the first boundary at or after its
+                arrival — so arrivals past the last such boundary (in
+                particular any at or after ``duration_s``) are never
+                admitted and count as unadmitted.  Shrink ``tick_s`` to
+                shrink that end-of-run blind window.
+
+        Deterministic for fixed inputs: the admission loop advances
+        simulated time in ``tick_s`` slices, and pull order is a total
+        order (pressure, shard index).
+        """
+        adm = self.admission
+        if programs is None:
+            programs = make_vu_programs(
+                self.funcs, n_vus, default_n_events(duration_s), self.seed
+            )
+        programs = list(programs)
+        if len(programs) != n_vus:
+            raise ValueError(f"len(programs)={len(programs)} != n_vus={n_vus}")
+        if arrivals is None:
+            arr = np.zeros(n_vus)
+        else:
+            arr = np.asarray(arrivals, np.float64)
+            if arr.shape != (n_vus,):
+                raise ValueError(f"arrivals shape {arr.shape} != ({n_vus},)")
+        order = np.argsort(arr, kind="stable")  # admission-queue order
+
+        sims: List[Simulator] = []
+        for k in range(self.n_shards):
+            sk = shard_seed(self.seed, k)
+            sched = make_scheduler(self.scheduler, self.worker_split[k], seed=sk)
+            sim = Simulator(
+                sched,
+                funcs=self.funcs,
+                cfg=dataclasses.replace(self.cfg, n_workers=self.worker_split[k]),
+                seed=sk,
+            )
+            sim.begin(n_vus=0, duration_s=duration_s, programs=[])
+            sims.append(sim)
+
+        admitted: List[List[int]] = [[] for _ in range(self.n_shards)]
+        admit_t: List[List[float]] = [[] for _ in range(self.n_shards)]
+        pulls = [0] * self.n_shards
+        waiting: deque = deque()
+        qpos = 0
+        rr_next = 0  # round_robin cursor
+        queue_t: List[float] = []
+        queue_depth: List[int] = []
+        tick = 0
+        t = 0.0
+        t0 = time.perf_counter()
+        while True:
+            while qpos < n_vus and arr[order[qpos]] <= t:
+                waiting.append(int(order[qpos]))
+                qpos += 1
+            if t < duration_s and waiting:
+                if adm.policy == "round_robin":
+                    # consecutive cyclic slots, so a quota of batch_size * K
+                    # gives every shard at most batch_size this tick
+                    quota = (
+                        n_vus if adm.batch_size is None
+                        else adm.batch_size * self.n_shards
+                    )
+                    while waiting and quota > 0:
+                        quota -= 1
+                        gid = waiting.popleft()
+                        k = rr_next % self.n_shards
+                        rr_next += 1
+                        local = sims[k].admit_vu(programs[gid], t=t)
+                        assert local == len(admitted[k])
+                        admitted[k].append(gid)
+                        admit_t[k].append(t)
+                        pulls[k] += 1
+                else:
+                    self._pull_tick(t, sims, programs, waiting, admitted, admit_t, pulls)
+            queue_t.append(t)
+            queue_depth.append(len(waiting))
+            if t >= duration_s and all(s.done for s in sims):
+                break
+            tick += 1
+            t = tick * adm.tick_s  # drift-free, like _stream_windows
+            for sim in sims:
+                sim.step_until(t)
+        wall_s = time.perf_counter() - t0
+        return self._merge(
+            sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth
+        )
+
+    def _pull_tick(self, t, sims, programs, waiting, admitted, admit_t, pulls) -> None:
+        """One admission round: shards pull from the queue, least pressure
+        first, until every shard sits at its watermark (or the queue/batch
+        cap empties).  The shard heap is the cluster-level ``PQ_f``."""
+        adm = self.admission
+        inv_w = [1.0 / max(n, 1) for n in self.worker_split]
+        tick_pulls = [0] * self.n_shards
+        heap = [(sims[k].pressure(), k) for k in range(self.n_shards)]
+        heapq.heapify(heap)
+        while waiting and heap:
+            p, k = heap[0]
+            if p >= adm.watermark:
+                break  # least-loaded shard is already at the watermark
+            gid = waiting.popleft()
+            local = sims[k].admit_vu(programs[gid], t=t)
+            assert local == len(admitted[k])
+            admitted[k].append(gid)
+            admit_t[k].append(t)
+            pulls[k] += 1
+            tick_pulls[k] += 1
+            if adm.batch_size is not None and tick_pulls[k] >= adm.batch_size:
+                heapq.heappop(heap)  # shard done for this tick
+            else:
+                # the admitted VU is not visible to pressure() until the
+                # event loop catches up; account for it explicitly
+                heapq.heapreplace(heap, (p + inv_w[k], k))
+
+    def _merge(
+        self, sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth
+    ) -> AdmissionRun:
+        shards: List[AdmissionShard] = []
+        parts: List[RecordColumns] = []
+        ats, aws = [], []
+        for k, sim in enumerate(sims):
+            vu_map = np.asarray(admitted[k], np.int32)
+            cols = sim.record_columns
+            at, aw = sim.assignment_columns
+            shards.append(
+                AdmissionShard(
+                    index=k,
+                    seed=shard_seed(self.seed, k),
+                    n_workers=self.worker_split[k],
+                    worker_offset=self.worker_offsets[k],
+                    admitted=vu_map,
+                    admit_t=np.asarray(admit_t[k]),
+                    pulls=pulls[k],
+                    records=cols,
+                    assign_t=at,
+                    assign_w=aw,
+                    n_events=sim.n_events,
+                )
+            )
+            parts.append(cols.remap(worker_offset=self.worker_offsets[k]).remap_vus(vu_map))
+            ats.append(at)
+            aws.append(aw + self.worker_offsets[k])
+        records = merge_window(parts)
+        at, aw = merge_assignments(ats, aws)
+        n_admitted = sum(len(a) for a in admitted)
+        return AdmissionRun(
+            shards=shards,
+            records=records,
+            assign_t=at,
+            assign_w=aw,
+            workers=list(range(self.n_workers)),
+            n_events=sum(s.n_events for s in sims),
+            wall_s=wall_s,
+            admitted=n_admitted,
+            unadmitted=n_vus - n_admitted,
+            queue_t=np.asarray(queue_t),
+            queue_depth=np.asarray(queue_depth, np.int64),
+        )

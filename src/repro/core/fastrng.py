@@ -270,17 +270,18 @@ def _lognormal_matrix_impl(
     sigma: float,
     check: bool = True,
     ev_start: int = 0,
+    vu_start: int = 0,
 ) -> np.ndarray:
     if check and not selftest():
         _warn_fallback_once()
         return np.array(
             [
                 [_slow_one(seed, v, e, mean, sigma) for e in range(ev_start, ev_start + n_events)]
-                for v in range(n_vus)
+                for v in range(vu_start, vu_start + n_vus)
             ]
         )
     wi, ki_safe, usable = _load_tables()
-    vu = np.repeat(np.arange(n_vus, dtype=np.uint32), n_events)
+    vu = np.repeat(np.arange(vu_start, vu_start + n_vus, dtype=np.uint32), n_events)
     ev = np.tile(np.arange(ev_start, ev_start + n_events, dtype=np.uint32), n_vus)
     sh0, sl0, inch, incl = _init_state(seed, vu, ev)
     sh, sl = _pcg_step(sh0, sl0, inch, incl)  # advance consumed by the draw
@@ -306,10 +307,20 @@ def _lognormal_matrix_impl(
 
 
 def lognormal_matrix(
-    seed: int, n_vus: int, n_events: int, mean: float, sigma: float, ev_start: int = 0
+    seed: int,
+    n_vus: int,
+    n_events: int,
+    mean: float,
+    sigma: float,
+    ev_start: int = 0,
+    vu_start: int = 0,
 ) -> np.ndarray:
-    """(n_vus, n_events) matrix whose entry [vu, j] is bit-identical to
-    ``np.random.default_rng((seed, vu, ev_start + j)).lognormal(mean, sigma)``."""
+    """(n_vus, n_events) matrix whose entry [i, j] is bit-identical to
+    ``np.random.default_rng((seed, vu_start + i, ev_start + j)).lognormal(mean, sigma)``.
+
+    ``ev_start`` extends a band rightward (more events per VU); ``vu_start``
+    generates rows for a VU range, which is how dynamically admitted VUs get
+    their fluctuation row without recomputing the whole band."""
     if n_vus <= 0 or n_events <= 0:
         return np.zeros((max(n_vus, 0), max(n_events, 0)))
     seed = int(seed)
@@ -317,10 +328,12 @@ def lognormal_matrix(
         return np.array(
             [
                 [_slow_one(seed, v, e, mean, sigma) for e in range(ev_start, ev_start + n_events)]
-                for v in range(n_vus)
+                for v in range(vu_start, vu_start + n_vus)
             ]
         )
-    return _lognormal_matrix_impl(seed, n_vus, n_events, mean, sigma, ev_start=ev_start)
+    return _lognormal_matrix_impl(
+        seed, n_vus, n_events, mean, sigma, ev_start=ev_start, vu_start=vu_start
+    )
 
 
 # ----------------------------------------------------------- table learning

@@ -41,7 +41,19 @@ from .scheduler import Scheduler, register
 
 @register("hiku")
 class HikuScheduler(Scheduler):
-    """Pull-based scheduler (the paper's contribution)."""
+    """Pull-based scheduler (the paper's contribution; see module docstring).
+
+    Args:
+        n_workers: initial worker count (ids 0..n-1; elastic add/remove via
+            the worker callbacks).
+        seed: tie-break RNG seed for the fallback path — part of the replay
+            identity the equivalence suite pins.
+        fallback: assignment when ``PQ_f`` is empty — ``"least_connections"``
+            (Algorithm 1) or ``"random"``.
+
+    Bound by the decision-equivalence contract: every ``select`` returns the
+    worker the seed engine's list-scan implementation would have picked
+    (tests/test_equivalence.py)."""
 
     def __init__(self, n_workers: int, seed: int = 0, fallback: str = "least_connections"):
         super().__init__(n_workers, seed)

@@ -36,11 +36,20 @@ _INF = jnp.int32(2**30)
 
 
 class JIQState(NamedTuple):
+    """Scheduler state in array form: the whole of Algorithm 1's bookkeeping.
+
+    ``idle[f, w]`` is the multiset count of worker ``w``'s entries in
+    ``PQ_f`` (one per enqueued idle instance); ``conns[w]`` is the active
+    connection count — the priority key.  Semantically equivalent to
+    ``HikuScheduler``'s object state (see module docstring)."""
+
     idle: jax.Array   # (F, W) int32 — PQ_f membership multiset
     conns: jax.Array  # (W,)  int32 — active connections
 
 
 def init_state(n_funcs: int, n_workers: int) -> JIQState:
+    """Empty :class:`JIQState` for ``n_funcs`` functions x ``n_workers``
+    workers (no idle instances enqueued, zero connections)."""
     return JIQState(
         idle=jnp.zeros((n_funcs, n_workers), jnp.int32),
         conns=jnp.zeros((n_workers,), jnp.int32),

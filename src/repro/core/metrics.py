@@ -12,7 +12,7 @@ loops performed (tests/test_records.py pins the parity at tolerance 0).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple, Union
+from typing import Dict, List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -25,6 +25,14 @@ AssignmentsLike = Union[Sequence[Tuple[float, int]], Tuple[np.ndarray, np.ndarra
 
 @dataclasses.dataclass
 class RunMetrics:
+    """The §V scalar metrics of one run (or one stream window).
+
+    Latencies in milliseconds; ``cold_rate`` is the cold-start fraction in
+    [0, 1]; ``throughput_rps`` is requests per second over the summarized
+    duration; ``load_cv`` is the mean per-second coefficient of variation
+    of assignments across workers (Figure 14).  Dataclass equality is exact
+    float equality — the windowed-metrics parity tests rely on that."""
+
     n_requests: int
     mean_latency_ms: float
     p50_ms: float
@@ -63,6 +71,9 @@ def _assignment_arrays(assignments: AssignmentsLike) -> Tuple[np.ndarray, np.nda
 
 
 def latency_cdf(records: RecordsLike, n_points: int = 200) -> Tuple[np.ndarray, np.ndarray]:
+    """Empirical latency CDF ``(latency_ms, fraction <= latency)`` over a
+    record stream (Figures 10-12), downsampled to at most ``n_points``
+    evenly spaced quantiles."""
     cols = RecordColumns.from_records(records)
     lat = np.sort(cols.latency_ms)
     y = np.arange(1, len(lat) + 1) / len(lat)
@@ -113,6 +124,19 @@ def summarize(
     workers: Sequence[int],
     duration_s: float,
 ) -> RunMetrics:
+    """Aggregate §V metrics over a full record stream, in one vectorized pass.
+
+    Args:
+        records: completed-request stream (columnar or legacy row list).
+        assignments: ``(t, worker)`` dispatch trace, columnar or row form;
+            times in seconds.
+        workers: global worker ids participating in the run (the CV
+            denominator — include idle workers).
+        duration_s: experiment length, seconds (throughput denominator).
+
+    Adapter-equivalence contract: row and columnar inputs produce
+    float-for-float identical results (tests/test_records.py, tolerance 0).
+    """
     cols = RecordColumns.from_records(records)
     n = len(cols)
     lat = cols.latency_ms if n else np.zeros(1)
@@ -129,3 +153,72 @@ def summarize(
         throughput_rps=n / max(duration_s, 1e-9),
         load_cv=float(cv.mean()) if cv.size else 0.0,
     )
+
+
+# ------------------------------------------------------------------ windowed
+def summarize_window(
+    records: RecordsLike,
+    assignments: AssignmentsLike,
+    workers: Sequence[int],
+    t_lo: float,
+    t_hi: float,
+) -> RunMetrics:
+    """Metrics for ONE completed stream window (``t_lo < t_done <= t_hi``).
+
+    Takes exactly a :class:`~repro.core.shard.StreamChunk`'s payload — the
+    window's records and its assignment slice — and evaluates the same
+    vectorized expressions :func:`summarize` applies to a full run, with
+    assignment times rebased to the window start so the per-second load-CV
+    bins are window-relative.  Both the streaming consumer and the batch
+    :func:`summarize_windows` go through this one function, which is what
+    makes their floats identical (tests/test_stream.py pins the parity).
+    """
+    cols = RecordColumns.from_records(records)
+    at, aw = _assignment_arrays(assignments)
+    return summarize(cols, (at - t_lo, aw), workers, t_hi - t_lo)
+
+
+def summarize_windows(
+    records: RecordsLike,
+    assignments: AssignmentsLike,
+    workers: Sequence[int],
+    window_s: float,
+    duration_s: float,
+    t_start: float = 0.0,
+) -> List[Tuple[float, RunMetrics]]:
+    """Windowed :func:`summarize` over a completion-ordered stream.
+
+    Buckets records by ``t_done`` and assignments by assignment time into
+    consecutive ``(t_lo, t_hi]`` windows of width ``window_s`` starting at
+    ``t_start`` (the first window also includes events at exactly
+    ``t_start``), continuing past ``duration_s`` until every record and
+    assignment is covered (completions can trail the deadline by the
+    scheduler overhead).  Returns ``[(t_hi, RunMetrics), ...]`` — the same
+    windows, in the same order, with the same float values a streaming
+    consumer gets from ``run_stream`` + :func:`summarize_window`.
+
+    Requires the stream to be sorted by ``t_done`` (engine and merged-run
+    order; see ``RecordColumns.window``).
+    """
+    if window_s <= 0:
+        raise ValueError("window_s must be > 0")
+    cols = RecordColumns.from_records(records)
+    at, aw = _assignment_arrays(assignments)
+    out: List[Tuple[float, RunMetrics]] = []
+    i = 0
+    n_rec = len(cols)
+    n_asg = at.shape[0]
+    ri = ai = 0
+    while True:
+        t_lo = t_start + i * window_s
+        t_hi = t_start + (i + 1) * window_s
+        wcols = cols.window(t_lo if i else -np.inf, t_hi)
+        rj = ri + len(wcols)
+        aj = int(np.searchsorted(at, t_hi, side="right"))
+        out.append(
+            (t_hi, summarize_window(wcols, (at[ai:aj], aw[ai:aj]), workers, t_lo, t_hi))
+        )
+        ri, ai = rj, aj
+        i += 1
+        if t_hi >= t_start + duration_s and ri >= n_rec and ai >= n_asg:
+            return out

@@ -73,7 +73,13 @@ _COL_DTYPES = (np.float64, np.float64, np.int32, np.int32, np.bool_, np.int32)
 
 
 class RecordColumns:
-    """Six parallel numpy columns over a request-record stream."""
+    """Six parallel numpy columns over a request-record stream.
+
+    Column units: times in seconds (float64 — the exact doubles the engine
+    produced; byte-fidelity contract), memory-free ids as int32, ``cold``
+    as bool.  Completion order is preserved; only ``concat``/``take`` (and
+    the searchsorted-based ``window`` view) reorder, explicitly.  Worker
+    and VU ids are shard-local until remapped (``remap``/``remap_vus``)."""
 
     __slots__ = _FIELDS
 
@@ -192,6 +198,30 @@ class RecordColumns:
             self.vu + np.int32(vu_offset),
         )
 
+    def remap_vus(self, vu_map: np.ndarray) -> "RecordColumns":
+        """Translate local VU ids through an explicit id table (``vu_map[local]
+        -> global``) — the merge step for dynamically admitted VUs, where
+        local ids are admission-order positions rather than a contiguous
+        offset range."""
+        vu_map = np.asarray(vu_map, np.int32)
+        return RecordColumns(
+            self.t_submit, self.t_done, self.func, self.worker, self.cold, vu_map[self.vu]
+        )
+
+    def window(self, t_lo: float, t_hi: float) -> "RecordColumns":
+        """Records completing in the half-open-from-above window
+        ``t_lo < t_done <= t_hi``.
+
+        Requires the stream to be sorted by ``t_done`` (engine completion
+        order and merged-run order both are); the slice is then two binary
+        searches, so windowed metrics over a merged run pay O(log n) per
+        window instead of a mask per call.  Pass ``t_lo=-inf`` for the first
+        window of a stream (includes records completing exactly at the
+        stream start)."""
+        lo = int(np.searchsorted(self.t_done, t_lo, side="right"))
+        hi = int(np.searchsorted(self.t_done, t_hi, side="right"))
+        return self[lo:hi]
+
 
 class RecordAccumulator:
     """Growable columnar accumulator the simulator hot loop appends into.
@@ -219,6 +249,19 @@ class RecordAccumulator:
         self.worker.append(worker)
         self.cold.append(cold)
         self.vu.append(vu)
+
+    def extend(self, cols: RecordColumns) -> None:
+        """Append a columnar chunk (the streaming-merge consumer path).
+
+        ``ndarray.tolist`` yields the exact stored doubles/ints/bools, so
+        accumulating stream chunks and snapshotting with :meth:`columns`
+        reproduces the batch-merged stream byte-for-byte."""
+        self.t_submit.extend(cols.t_submit.tolist())
+        self.t_done.extend(cols.t_done.tolist())
+        self.func.extend(cols.func.tolist())
+        self.worker.extend(cols.worker.tolist())
+        self.cold.extend(cols.cold.tolist())
+        self.vu.extend(cols.vu.tolist())
 
     def __len__(self) -> int:
         return len(self.t_submit)

@@ -153,10 +153,18 @@ def register(name: str):
 
 
 def make_scheduler(name: str, n_workers: int, seed: int = 0, **kw) -> Scheduler:
+    """Instantiate a registered scheduler by name (``"hiku"``, ``"ch_bl"``,
+    ``"least_connections"``, ``"random"``, ...).
+
+    ``seed`` feeds the scheduler's private tie-break RNG only — workload
+    randomness lives in the simulator — and is part of the replay identity
+    the equivalence suite pins.  Extra kwargs go to the concrete class
+    (e.g. ``fallback=`` for hiku, ``threshold=`` for CH-BL)."""
     if name not in _REGISTRY:
         raise KeyError(f"unknown scheduler {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[name](n_workers, seed=seed, **kw)
 
 
 def available_schedulers() -> List[str]:
+    """Sorted names accepted by :func:`make_scheduler`."""
     return sorted(_REGISTRY)

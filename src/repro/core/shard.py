@@ -26,6 +26,11 @@ frozen-seed-engine checks in tests/test_equivalence.py):
   completion time (ties broken by shard index), matching the completion
   order a monolithic engine emits.  Aggregate metrics come out of one
   vectorized pass over the merged columns.
+* **Stream semantics** — ``run_stream`` emits the same merge incrementally
+  as completed ``StreamChunk`` windows (heap-merge frontier: a record is
+  emitted once no shard can still produce an earlier completion);
+  concatenated chunks are byte-identical to the batch merge on every
+  backend and for any window width (tests/test_stream.py).
 
 Backends:
 
@@ -51,14 +56,17 @@ import time
 import warnings
 from collections import deque
 from concurrent.futures import ProcessPoolExecutor
-from typing import List, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from bisect import bisect_right
 
 from .metrics import RunMetrics, summarize
 from .records import RecordColumns
 from .scheduler import make_scheduler
 from .simulator import SimConfig, Simulator
+from .trace import VUProgram
 
 __all__ = [
     "SEED_STRIDE",
@@ -66,6 +74,7 @@ __all__ = [
     "ShardResult",
     "ShardSpec",
     "ShardedSimulator",
+    "StreamChunk",
     "build_simulator",
     "merge_shard_results",
     "run_shard",
@@ -89,7 +98,13 @@ def split_even(total: int, parts: int) -> List[int]:
 
 @dataclasses.dataclass(frozen=True)
 class ShardSpec:
-    """Everything needed to replay one shard deterministically (picklable)."""
+    """Everything needed to replay one shard deterministically (picklable).
+
+    ``programs`` is None for the default self-generated workload (the shard
+    derives its VU programs from its own seed); when set, it carries this
+    shard's contiguous slice of an explicit global VU population — the
+    trace-driven path benchmarks use to build cross-shard skew the static
+    partition cannot balance."""
 
     index: int
     n_shards: int
@@ -102,6 +117,7 @@ class ShardSpec:
     vu_offset: int  # global id base for this shard's VUs
     failures: Tuple[Tuple[float, int], ...] = ()  # (t, local worker id)
     additions: Tuple[Tuple[float, int], ...] = ()  # (t, local worker id)
+    programs: Optional[Tuple[VUProgram, ...]] = None  # explicit VU slice
 
 
 @dataclasses.dataclass
@@ -147,8 +163,9 @@ def run_shard(spec: ShardSpec) -> ShardResult:
     materialized — results cross process boundaries as column buffers.
     """
     sim = build_simulator(spec)
+    programs = list(spec.programs) if spec.programs is not None else None
     t0 = time.perf_counter()
-    for _ in sim.run_iter(n_vus=spec.n_vus, duration_s=spec.duration_s):
+    for _ in sim.run_iter(n_vus=spec.n_vus, duration_s=spec.duration_s, programs=programs):
         pass
     return _result_from(spec, sim, time.perf_counter() - t0)
 
@@ -181,6 +198,21 @@ class MergedRun:
         )
 
 
+def merge_assignments(
+    ats: Sequence[np.ndarray], aws: Sequence[np.ndarray]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Stable-merge per-shard assignment traces by time (shard-order concat +
+    stable sort — the merge contract's tie-break, shared by the batch merge,
+    the streaming merge, and the admission tier).  ``aws`` entries must
+    already carry global worker ids."""
+    if not ats:
+        return np.zeros(0), np.zeros(0, np.int64)
+    at = np.concatenate([np.asarray(a, np.float64) for a in ats])
+    aw = np.concatenate([np.asarray(w, np.int64) for w in aws])
+    order = np.argsort(at, kind="stable")
+    return at[order], aw[order]
+
+
 def merge_shard_results(results: Sequence[ShardResult], wall_s: float) -> MergedRun:
     """Remap shard-local ids to global ranges and stable-merge by time."""
     results = sorted(results, key=lambda r: r.spec.index)
@@ -188,15 +220,11 @@ def merge_shard_results(results: Sequence[ShardResult], wall_s: float) -> Merged
         r.records.remap(worker_offset=r.spec.worker_offset, vu_offset=r.spec.vu_offset)
         for r in results
     ]
-    cat = RecordColumns.concat(parts)
-    records = cat.take(np.argsort(cat.t_done, kind="stable")) if len(cat) else cat
-    if results:
-        at = np.concatenate([r.assign_t for r in results])
-        aw = np.concatenate([r.assign_w + r.spec.worker_offset for r in results])
-        order = np.argsort(at, kind="stable")
-        at, aw = at[order], aw[order]
-    else:
-        at, aw = np.zeros(0), np.zeros(0, np.int64)
+    records = merge_window(parts)
+    at, aw = merge_assignments(
+        [r.assign_t for r in results],
+        [r.assign_w + r.spec.worker_offset for r in results],
+    )
     workers = [
         r.spec.worker_offset + i for r in results for i in range(r.spec.cfg.n_workers)
     ]
@@ -209,6 +237,139 @@ def merge_shard_results(results: Sequence[ShardResult], wall_s: float) -> Merged
         n_events=sum(r.n_events for r in results),
         wall_s=wall_s,
     )
+
+
+# ------------------------------------------------------------ streaming merge
+@dataclasses.dataclass
+class StreamChunk:
+    """One completed window of a streaming K-shard merge.
+
+    ``records`` holds the window's globally-id-remapped records in exactly
+    the batch-merge order (stable by completion time, ties broken by shard
+    index); concatenating every chunk of a stream reproduces
+    ``MergedRun.records`` byte-for-byte.  Windows are
+    ``t_lo < t_done <= t_hi`` (the first window also includes the stream
+    start), with record times bucketed by ``t_done`` and assignments by
+    assignment time.
+    """
+
+    index: int  # window number, 0-based
+    t_lo: float
+    t_hi: float
+    records: RecordColumns  # global ids, merged by (t_done, shard)
+    assign_t: np.ndarray
+    assign_w: np.ndarray
+    shard_counts: np.ndarray  # records per shard in this window (live load view)
+
+
+class _StreamCursor:
+    """Incremental reader over one shard's (possibly still growing) stream.
+
+    Works over python lists (a live simulator's accumulator, via bisect) and
+    numpy arrays (a completed shard's columns, same bisection protocol)
+    alike; both are ascending in ``t_done`` / assignment time because the
+    engine appends in event order."""
+
+    __slots__ = ("td", "cols", "at", "aw", "ri", "ai")
+
+    def __init__(self, td, cols, at, aw):
+        self.td = td  # t_done sequence, ascending
+        self.cols = cols  # 6-tuple of parallel column sequences
+        self.at = at  # assignment times, ascending
+        self.aw = aw
+        self.ri = 0
+        self.ai = 0
+
+    def take_records(self, t_hi: float) -> RecordColumns:
+        j = bisect_right(self.td, t_hi, self.ri)
+        out = RecordColumns(*(c[self.ri : j] for c in self.cols))
+        self.ri = j
+        return out
+
+    def take_assignments(self, t_hi: float) -> Tuple[np.ndarray, np.ndarray]:
+        j = bisect_right(self.at, t_hi, self.ai)
+        at = np.asarray(self.at[self.ai : j], np.float64)
+        aw = np.asarray(self.aw[self.ai : j], np.int64)
+        self.ai = j
+        return at, aw
+
+    @property
+    def drained(self) -> bool:
+        return self.ri >= len(self.td) and self.ai >= len(self.at)
+
+
+def _cursor_for_result(res: ShardResult) -> _StreamCursor:
+    c = res.records
+    return _StreamCursor(
+        c.t_done, (c.t_submit, c.t_done, c.func, c.worker, c.cold, c.vu),
+        res.assign_t, res.assign_w,
+    )
+
+
+def _cursor_for_sim(sim: Simulator) -> _StreamCursor:
+    acc = sim._rec
+    return _StreamCursor(
+        acc.t_done, (acc.t_submit, acc.t_done, acc.func, acc.worker, acc.cold, acc.vu),
+        sim._asg_t, sim._asg_w,
+    )
+
+
+def merge_window(parts: Sequence[RecordColumns]) -> RecordColumns:
+    """Stable-merge already-remapped per-shard window segments by completion
+    time — the same ``concat`` + stable argsort the batch merge applies, so
+    a window of the stream equals the corresponding slice of the batch-merged
+    stream."""
+    cat = RecordColumns.concat(parts)
+    if len(cat):
+        cat = cat.take(np.argsort(cat.t_done, kind="stable"))
+    return cat
+
+
+def _stream_windows(
+    specs: Sequence[ShardSpec],
+    cursors: Sequence[_StreamCursor],
+    duration_s: float,
+    window_s: float,
+    advance=None,
+) -> "Iterator[StreamChunk]":
+    """Yield merged windows until the run is over and every cursor drains.
+
+    ``advance(t_hi)`` (live mode) steps each shard's event loop to the
+    window boundary before the take, so a record can only be read once no
+    shard can still produce an earlier completion — the heap-merge safety
+    frontier."""
+    if window_s <= 0:
+        raise ValueError("window_s must be > 0")
+    i = 0
+    while True:
+        t_lo = i * window_s
+        t_hi = (i + 1) * window_s
+        if advance is not None:
+            advance(t_hi)
+        parts, counts, ats, aws = [], [], [], []
+        for spec, cur in zip(specs, cursors):
+            p = cur.take_records(t_hi).remap(
+                worker_offset=spec.worker_offset, vu_offset=spec.vu_offset
+            )
+            parts.append(p)
+            counts.append(len(p))
+            at, aw = cur.take_assignments(t_hi)
+            ats.append(at)
+            aws.append(aw + spec.worker_offset)
+        records = merge_window(parts)
+        at, aw = merge_assignments(ats, aws)
+        yield StreamChunk(
+            index=i,
+            t_lo=t_lo,
+            t_hi=t_hi,
+            records=records,
+            assign_t=at,
+            assign_w=aw,
+            shard_counts=np.asarray(counts, np.int64),
+        )
+        i += 1
+        if t_hi >= duration_s and all(c.drained for c in cursors):
+            return
 
 
 def _run_process_pool(
@@ -241,6 +402,7 @@ def _run_interleaved(
     walls = [0.0] * len(specs)
     ready = deque(
         (i, sim.run_iter(n_vus=spec.n_vus, duration_s=spec.duration_s,
+                         programs=list(spec.programs) if spec.programs is not None else None,
                          yield_every=yield_every))
         for i, (spec, sim) in enumerate(zip(specs, sims))
     )
@@ -262,6 +424,21 @@ def _run_interleaved(
 
 class ShardedSimulator:
     """K independent ``Simulator`` shards behind one ``run()`` call.
+
+    Args:
+        n_shards: shard (independent cluster) count, >= 1.
+        n_workers: total workers, split largest-remainder evenly; shard
+            ``k`` owns the contiguous global id range starting at its
+            prefix-sum offset (partition contract).
+        scheduler: per-shard scheduler name (each shard gets its own
+            instance via ``make_scheduler``).
+        cfg: per-shard :class:`SimConfig` template; ``n_workers`` is
+            rewritten per shard, every other knob is shared.
+        seed: driver seed; shard ``k`` runs with ``shard_seed(seed, k)``
+            (golden-ratio stride, see module docstring — the seeding
+            contract).
+        backend: ``"process"`` / ``"interleaved"`` / ``"serial"`` /
+            ``"auto"``; all backends produce identical per-shard streams.
 
     Elasticity and fault injection stay per-shard (each shard is an
     independent cluster): ``inject_failure`` takes a *global* worker id and
@@ -325,8 +502,21 @@ class ShardedSimulator:
         self._additions.append((shard, t, local_worker))
 
     # ---------------------------------------------------------------- plan
-    def plan(self, n_vus: int, duration_s: float) -> List[ShardSpec]:
-        """The deterministic per-shard specs a run() with these args uses."""
+    def plan(
+        self,
+        n_vus: int,
+        duration_s: float,
+        programs: Optional[Sequence[VUProgram]] = None,
+    ) -> List[ShardSpec]:
+        """The deterministic per-shard specs a run() with these args uses.
+
+        With ``programs`` (an explicit global VU population, len ==
+        ``n_vus``) each shard receives its *contiguous* slice — global VU
+        ``vu_offset + i`` is shard-local VU ``i`` — which is exactly the
+        static partitioning the pull-based admission tier
+        (``core.admission``) is benchmarked against."""
+        if programs is not None and len(programs) != n_vus:
+            raise ValueError(f"len(programs)={len(programs)} != n_vus={n_vus}")
         vu_split = split_even(n_vus, self.n_shards)
         vu_off = 0
         specs = []
@@ -344,6 +534,11 @@ class ShardedSimulator:
                     vu_offset=vu_off,
                     failures=tuple((t, w) for s, t, w in self._failures if s == k),
                     additions=tuple((t, w) for s, t, w in self._additions if s == k),
+                    programs=(
+                        tuple(programs[vu_off : vu_off + vu_split[k]])
+                        if programs is not None
+                        else None
+                    ),
                 )
             )
             vu_off += vu_split[k]
@@ -359,8 +554,27 @@ class ShardedSimulator:
         return "interleaved"
 
     # ----------------------------------------------------------------- run
-    def run(self, n_vus: int = 20, duration_s: float = 100.0) -> MergedRun:
-        specs = self.plan(n_vus, duration_s)
+    def run(
+        self,
+        n_vus: int = 20,
+        duration_s: float = 100.0,
+        programs: Optional[Sequence[VUProgram]] = None,
+    ) -> MergedRun:
+        """Run all K shards to completion and batch-merge their streams.
+
+        Args:
+            n_vus: global closed-loop VU count, split largest-remainder
+                evenly across shards.
+            duration_s: simulated experiment length per shard, seconds.
+            programs: optional explicit global VU population (see
+                :meth:`plan`); default: each shard self-generates from its
+                own seed.
+
+        Bound by the merge contract: the returned stream is stable-merged
+        by completion time (ties broken by shard index) over byte-exact
+        per-shard replays.
+        """
+        specs = self.plan(n_vus, duration_s, programs)
         backend = self._resolve_backend()
         t0 = time.perf_counter()
         if backend == "process":
@@ -370,3 +584,50 @@ class ShardedSimulator:
         else:
             results = [run_shard(s) for s in specs]
         return merge_shard_results(results, time.perf_counter() - t0)
+
+    # -------------------------------------------------------------- stream
+    def run_stream(
+        self,
+        n_vus: int = 20,
+        duration_s: float = 100.0,
+        window_s: float = 1.0,
+        programs: Optional[Sequence[VUProgram]] = None,
+    ) -> Iterator[StreamChunk]:
+        """Streaming form of :meth:`run`: heap-merge the shard streams into
+        completed ``window_s``-wide :class:`StreamChunk` windows.
+
+        Concatenating every chunk's records reproduces the batch
+        ``run().records`` byte-for-byte on every backend (pinned by
+        tests/test_stream.py).  On the ``interleaved`` backend the shard
+        event loops are co-run in simulated-time lockstep and each window is
+        emitted as soon as it completes, so windowed metrics
+        (``metrics.summarize_window``) observe an *in-flight* sharded run;
+        ``serial``/``process`` complete the shards first and then stream the
+        identical merge (useful for post-hoc windowing, without the
+        in-flight property).
+        """
+        specs = self.plan(n_vus, duration_s, programs)
+        backend = self._resolve_backend()
+        if backend == "interleaved":
+            sims = [build_simulator(spec) for spec in specs]
+            for spec, sim in zip(specs, sims):
+                sim.begin(
+                    n_vus=spec.n_vus,
+                    duration_s=spec.duration_s,
+                    programs=list(spec.programs) if spec.programs is not None else None,
+                )
+            cursors = [_cursor_for_sim(sim) for sim in sims]
+
+            def advance(t_hi: float) -> None:
+                for sim in sims:
+                    sim.step_until(t_hi)
+
+            yield from _stream_windows(specs, cursors, duration_s, window_s, advance)
+        else:
+            if backend == "process":
+                results = _run_process_pool(specs)
+            else:
+                results = [run_shard(s) for s in specs]
+            results = sorted(results, key=lambda r: r.spec.index)
+            cursors = [_cursor_for_result(r) for r in results]
+            yield from _stream_windows(specs, cursors, duration_s, window_s)

@@ -55,11 +55,45 @@ import numpy as np
 
 from .records import RecordAccumulator, RecordColumns, RequestRecord
 from .scheduler import Scheduler
-from .trace import FunctionSpec, VUProgram, make_functions, make_vu_programs, service_fluctuations
+from .trace import (
+    FunctionSpec,
+    VUProgram,
+    default_n_events,
+    make_functions,
+    make_vu_programs,
+    service_fluctuations,
+)
 
 
 @dataclasses.dataclass
 class SimConfig:
+    """Cluster + experiment knobs for one :class:`Simulator` (the paper's §V
+    OpenLambda deployment, parameterized).
+
+    Changing any field changes the event stream, so configs are part of the
+    replay identity: the byte-for-byte equivalence suite
+    (tests/test_equivalence.py) always runs seed and refactored engines with
+    the *same* ``SimConfig``.
+
+    Attributes:
+        n_workers: worker (OpenLambda node) count.  The sharded driver
+            rewrites this per shard via ``dataclasses.replace``.
+        cores_per_worker: vCPUs per worker; tasks share them processor-
+            sharing style (rate = cores/n_running when oversubscribed).
+        mem_pool_mb: sandbox memory pool per worker, MB.  Calibrated with
+            ``keep_alive_s`` so the §V protocol lands at the paper's
+            operating point (hiku cold rate ~20-30%, baselines 33-60%).
+        keep_alive_s: idle-instance keep-alive before the sweeper evicts,
+            seconds (Figure 2 lifecycle).
+        sweep_every_s: keep-alive sweep period, seconds.
+        exec_sigma: lognormal sigma of per-request service fluctuation
+            (Figure 5); part of the fluctuation-band cache key.
+        overhead_ms: scheduler decision overhead added to every request's
+            completion time, milliseconds (the §V overhead experiment).
+        retry_delay_s: control-plane resubmit delay after a request is lost
+            to a worker failure, seconds.
+    """
+
     n_workers: int = 5
     cores_per_worker: float = 4.0
     # pool/keep-alive calibrated so the §V protocol lands at the paper's
@@ -217,7 +251,28 @@ _FLUCT_CACHE: Dict[Tuple[int, int, float], Dict] = {}
 
 
 class Simulator:
-    """Event-driven FaaS cluster; ``run()`` returns request records + stats."""
+    """Event-driven FaaS cluster; ``run()`` returns request records + stats.
+
+    Entry points (all drive the ONE event loop, so the byte-for-byte replay
+    contract against the frozen seed engine covers each of them):
+
+    * :meth:`run` — batch: drain to the deadline, return the record list.
+    * :meth:`run_iter` — cooperative: yields every ``yield_every`` events
+      (the sharded driver's ``interleaved`` backend).
+    * :meth:`begin` + :meth:`step_until` — externally clocked: the caller
+      advances simulated time in slices and may inject arrivals between
+      slices via :meth:`admit_vu` (streaming merge / admission tier).
+
+    Args:
+        scheduler: any ``core.Scheduler``; fed the assign/finish/evict
+            callbacks the real control plane would issue.
+        funcs: function population (default: the seeded 40-function
+            Azure-like population from ``trace.make_functions``).
+        cfg: cluster knobs (:class:`SimConfig`).
+        seed: workload seed.  Seeds VU programs *and* the per-request
+            service-fluctuation identity ``(seed, vu, ev)``; under the
+            sharded driver this is ``shard_seed(seed, k)``.
+    """
 
     def __init__(
         self,
@@ -234,6 +289,7 @@ class Simulator:
         self._heap: List[Tuple[float, int, int, tuple]] = []
         self._seq = itertools.count()
         self.t = 0.0
+        self._deadline = 0.0  # set by begin()/run_iter()
         # columnar accumulation; .records/.assignments are lazy list views
         self._rec = RecordAccumulator()
         self._rec_append = self._rec.append
@@ -317,9 +373,78 @@ class Simulator:
         programs: Optional[List[VUProgram]] = None,
         t_start: float = 0.0,
     ) -> List[RequestRecord]:
+        """Run the full experiment and return the legacy record list.
+
+        Args:
+            n_vus: closed-loop virtual users (all start at ``t_start``).
+            duration_s: simulated experiment length, seconds; events past
+                ``t_start + duration_s`` are not processed.
+            programs: explicit per-VU programs (len == ``n_vus``); default
+                generates the seeded Azure-like workload.
+            t_start: simulated start time, seconds.
+
+        Bound by the byte-for-byte replay contract: the returned
+        ``RequestRecord`` stream is identical to the frozen seed engine's
+        for the same (scheduler, cfg, seed, workload).
+        """
         for _ in self.run_iter(n_vus, duration_s, programs, t_start):
             pass
         return self.records
+
+    def begin(
+        self,
+        n_vus: int = 20,
+        duration_s: float = 100.0,
+        programs: Optional[List[VUProgram]] = None,
+        t_start: float = 0.0,
+    ) -> None:
+        """Arm the event loop without running it (the backpressure hook).
+
+        Seeds the heap with the initial VU submits, the keep-alive sweep and
+        any injected failure/addition events, exactly as :meth:`run_iter`
+        does before its first pop.  Afterwards the caller drives the clock
+        explicitly with :meth:`step_until` and may feed arrivals in with
+        :meth:`admit_vu` — this is how the global admission tier
+        (``core.admission``) co-runs K shard simulators in simulated-time
+        lockstep.  ``begin(n_vus=0, programs=[])`` arms an *empty* cluster
+        that only serves admitted VUs.
+        """
+        cfg = self.cfg
+        if programs is None:
+            programs = make_vu_programs(
+                self.funcs, n_vus, default_n_events(duration_s), self.seed
+            )
+        self._programs = list(programs)
+        self._prog_funcs = [p.func_idx.tolist() for p in programs]
+        self._prog_sleeps = [p.sleep_s.tolist() for p in programs]
+        self._vu_pos = [0] * n_vus
+        self._deadline = t_start + duration_s
+        self._fluct = self._fluct_entry(n_vus)
+        self._overhead_s = cfg.overhead_ms / 1e3
+
+        for vu in range(n_vus):
+            self._push(t_start, _SUBMIT, (vu,))
+        self._push(t_start + cfg.sweep_every_s, _SWEEP)
+        for t, w in self._failures:
+            self._push(t, _FAIL, (w,))
+        for t, w in self._additions:
+            self._push(t, _ADD, (w,))
+
+    def _step_event(self, kind: int, payload: tuple) -> None:
+        # The one kind->handler dispatch, shared by run_iter and step_until
+        # so the two clock forms cannot drift apart.
+        if kind == _SUBMIT:
+            self._ev_submit(payload[0])
+        elif kind == _COMPLETE:
+            self._ev_complete(payload[0], payload[1])
+        elif kind == _RESUBMIT:
+            self._dispatch(payload[0])
+        elif kind == _SWEEP:
+            self._ev_sweep()
+        elif kind == _FAIL:
+            self._ev_fail(payload[0])
+        else:
+            self._ev_add_worker(payload[0])
 
     def run_iter(
         self,
@@ -336,31 +461,14 @@ class Simulator:
 
         ``run`` is exactly ``drain(run_iter(...))`` — there is ONE event
         loop, so the byte-for-byte replay contract with tests/legacy covers
-        both entry points.
+        both entry points.  (:meth:`begin` + :meth:`step_until` expose the
+        same loop under external clock control; the pop/dispatch sequence,
+        and therefore the record stream, is identical on every path.)
         """
-        cfg = self.cfg
-        if programs is None:
-            # generous upper bound on events per VU
-            n_events = int(duration_s * 4) + 16
-            programs = make_vu_programs(self.funcs, n_vus, n_events, self.seed)
-        self._programs = programs
-        self._prog_funcs = [p.func_idx.tolist() for p in programs]
-        self._prog_sleeps = [p.sleep_s.tolist() for p in programs]
-        self._vu_pos = [0] * n_vus
-        self._deadline = t_start + duration_s
-        self._fluct = self._fluct_entry(n_vus)
-        self._overhead_s = cfg.overhead_ms / 1e3
-
-        for vu in range(n_vus):
-            self._push(t_start, _SUBMIT, (vu,))
-        self._push(t_start + cfg.sweep_every_s, _SWEEP)
-        for t, w in self._failures:
-            self._push(t, _FAIL, (w,))
-        for t, w in self._additions:
-            self._push(t, _ADD, (w,))
-
+        self.begin(n_vus, duration_s, programs, t_start)
         heap = self._heap
         pop = heapq.heappop
+        step = self._step_event
         deadline = self._deadline
         n = 0
         try:
@@ -370,24 +478,99 @@ class Simulator:
                     break
                 self.t = t
                 n += 1
-                if kind == _SUBMIT:
-                    self._ev_submit(payload[0])
-                elif kind == _COMPLETE:
-                    self._ev_complete(payload[0], payload[1])
-                elif kind == _RESUBMIT:
-                    self._dispatch(payload[0])
-                elif kind == _SWEEP:
-                    self._ev_sweep()
-                elif kind == _FAIL:
-                    self._ev_fail(payload[0])
-                else:
-                    self._ev_add_worker(payload[0])
+                step(kind, payload)
                 if not n % yield_every:
                     yield n
         finally:
             # also runs on GeneratorExit, so a consumer that stops driving
             # the generator early still gets the processed events accounted
             self.n_events += n
+
+    # ----------------------------------------------- stepped clock / admission
+    def step_until(self, t_limit: float) -> int:
+        """Process every pending event with time <= ``t_limit`` (seconds).
+
+        The stepped form of the :meth:`run_iter` loop: same pop order, same
+        handler dispatch, so driving a simulator with a monotone sequence of
+        ``step_until`` calls up to the deadline reproduces the exact record
+        stream ``run`` emits (events past the deadline are never processed
+        on either path).  Requires a prior :meth:`begin`.  Returns the
+        number of events processed this call.
+        """
+        heap = self._heap
+        pop = heapq.heappop
+        step = self._step_event
+        deadline = self._deadline
+        bound = t_limit if t_limit < deadline else deadline
+        n = 0
+        while heap and heap[0][0] <= bound:
+            t, _, kind, payload = pop(heap)
+            self.t = t
+            n += 1
+            step(kind, payload)
+        self.n_events += n
+        return n
+
+    @property
+    def done(self) -> bool:
+        """True once no pending event falls inside the deadline."""
+        return not self._heap or self._heap[0][0] > self._deadline
+
+    def pressure(self) -> float:
+        """Local load pressure: queued arrivals per worker + busy fraction.
+
+        ``queued`` counts tasks parked on worker pending queues (admitted
+        but waiting for sandbox memory); ``busy`` counts workers with at
+        least one running task.  Both are normalized by the live worker
+        count, so an idle cluster reads 0.0, a fully busy queue-free
+        cluster reads 1.0, and queueing pushes the value above 1.  This is
+        the watermark signal the global admission tier polls between
+        :meth:`step_until` calls.
+        """
+        alive = busy = queued = 0
+        for w in self.workers.values():
+            alive += 1
+            if w.running:
+                busy += 1
+            queued += len(w.pending)
+        if not alive:
+            return float("inf")
+        return (queued + busy) / alive
+
+    def admit_vu(self, program: VUProgram, t: Optional[float] = None) -> int:
+        """Admit one closed-loop VU mid-run (the admission tier's pull).
+
+        Appends the program to the live population and schedules its first
+        submit at time ``t`` (default: the current clock).  Returns the new
+        VU's *local* id — callers that merge streams across simulators keep
+        their own local->global id map.  The VU's service-fluctuation row is
+        pre-filled to the band's current width so the (seed, vu, ev)
+        identity seeding holds for admitted VUs exactly as for planned
+        ones.  Requires a prior :meth:`begin`; ``t`` must not precede the
+        current clock.
+        """
+        t = self.t if t is None else float(t)
+        if t < self.t:
+            raise ValueError(f"cannot admit in the past: t={t} < now={self.t}")
+        vu = len(self._prog_funcs)
+        self._programs.append(program)
+        self._prog_funcs.append(program.func_idx.tolist())
+        self._prog_sleeps.append(program.sleep_s.tolist())
+        self._vu_pos.append(0)
+        entry = self._fluct
+        rows = entry["rows"]
+        cols = entry["cols"]
+        while len(rows) <= vu:  # deterministic grow (entries may be shared)
+            v = len(rows)
+            if cols:
+                band = service_fluctuations(
+                    self.seed, 1, cols, self.cfg.exec_sigma, vu_start=v
+                )
+                rows.append(band[0].tolist())
+            else:
+                rows.append([])
+        self._push(t, _SUBMIT, (vu,))
+        return vu
 
     # ------------------------------------------------------------ handlers
     def _ev_submit(self, vu: int) -> None:

@@ -55,6 +55,9 @@ APP_MEM_MB: Dict[str, float] = {
 
 @dataclasses.dataclass(frozen=True)
 class FunctionSpec:
+    """One deployable function: Table-I base latencies (ms), sandbox
+    footprint (MB) and its Azure-skewed invocation probability."""
+
     name: str
     app: str
     cold_ms: float
@@ -156,6 +159,18 @@ class VUProgram:
 _PROG_CACHE: Dict[tuple, List["VUProgram"]] = {}
 
 
+def default_n_events(duration_s: float) -> int:
+    """Engine-default events per VU program for a ``duration_s``-second run.
+
+    A generous upper bound (4 requests/s plus slack) so closed-loop VUs
+    never exhaust their program before the deadline.  Every driver that
+    builds a default workload (``Simulator.begin``, ``AdmissionSimulator``,
+    benchmarks, examples) uses this one formula, which is pinned by the
+    frozen seed engine's replay contract — changing it changes every
+    default-workload stream."""
+    return int(duration_s * 4) + 16
+
+
 def make_vu_programs(
     funcs: Sequence[FunctionSpec],
     n_vus: int,
@@ -164,6 +179,13 @@ def make_vu_programs(
     think_lo: float = 0.1,
     think_hi: float = 1.0,
 ) -> List[VUProgram]:
+    """Seeded closed-loop programs for ``n_vus`` virtual users.
+
+    VU ``vu`` draws ``n_events`` weighted function choices and
+    ``U(think_lo, think_hi)`` think times (seconds) from
+    ``default_rng((seed, vu))`` — deterministic per (weights, shape, seed),
+    so every scheduler replays the identical request sequence (the paper's
+    fairness device).  Returned lists are memoized and shared read-only."""
     # Programs are a pure function of (weights, shape, seed): memoize so the
     # benchmark matrix generates each seeded workload once, not once per
     # scheduler.  Returned lists are shared read-only.
@@ -192,20 +214,23 @@ def service_time_ms(spec: FunctionSpec, cold: bool, rng: np.random.Generator, si
 
 
 def service_fluctuations(
-    seed: int, n_vus: int, n_events: int, sigma: float, ev_start: int = 0
+    seed: int, n_vus: int, n_events: int, sigma: float, ev_start: int = 0, vu_start: int = 0
 ) -> np.ndarray:
     """Pre-generated per-request service-time fluctuation band.
 
-    Entry ``[vu, j]`` is bit-identical to what the seed simulator drew
-    per-request: ``default_rng((seed, vu, ev_start + j)).lognormal(-σ²/2, σ)``
-    — the request-identity seeding that lets every scheduler replay the same
-    stochastic demand.  Computed vectorized (see ``fastrng``) so programs can
-    carry their fluctuations instead of paying a Generator construction per
-    request in the simulator hot loop.
+    Entry ``[i, j]`` is bit-identical to what the seed simulator drew
+    per-request: ``default_rng((seed, vu_start + i, ev_start + j))
+    .lognormal(-σ²/2, σ)`` — the request-identity seeding that lets every
+    scheduler replay the same stochastic demand.  Computed vectorized (see
+    ``fastrng``) so programs can carry their fluctuations instead of paying
+    a Generator construction per request in the simulator hot loop;
+    ``vu_start`` lets dynamically admitted VUs fill in their single row.
     """
     from .fastrng import lognormal_matrix
 
-    return lognormal_matrix(seed, n_vus, n_events, -0.5 * sigma**2, sigma, ev_start=ev_start)
+    return lognormal_matrix(
+        seed, n_vus, n_events, -0.5 * sigma**2, sigma, ev_start=ev_start, vu_start=vu_start
+    )
 
 
 # ------------------------------------------------------------------ Figure 6

@@ -1,0 +1,131 @@
+"""Executable-documentation smoke: every fenced ``python``/``bash`` block in
+README.md and docs/*.md must run green (quick settings), so the examples
+cannot rot.
+
+Conventions (stated in docs/ARCHITECTURE.md):
+
+* blocks are executed in file order; python blocks share one namespace per
+  file, so later snippets may build on earlier ones;
+* a block preceded by an ``<!-- docs-smoke: skip -->`` comment (the nearest
+  non-blank line above the fence) is skipped — reserved for human-workflow
+  commands like running the full test suite;
+* untagged fences are never executed (use them for output or pseudo-code);
+* executed blocks must finish in well under the per-block timeout
+  (``PER_BLOCK_TIMEOUT_S``) — keep doc examples at quick-settings scale.
+"""
+
+import os
+import re
+import signal
+import subprocess
+import sys
+from pathlib import Path
+from typing import List, NamedTuple
+
+import pytest
+
+pytestmark = pytest.mark.docs
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+SKIP_MARK = "<!-- docs-smoke: skip -->"
+PER_BLOCK_TIMEOUT_S = 600
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+class Block(NamedTuple):
+    lang: str
+    code: str
+    lineno: int  # 1-based line of the opening fence
+    skipped: bool
+
+
+def extract_blocks(path: Path) -> List[Block]:
+    blocks: List[Block] = []
+    lines = path.read_text().splitlines()
+    i = 0
+    last_nonblank = ""
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if m and m.group(1):
+            lang = m.group(1).lower()
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            code = "\n".join(lines[start:j])
+            blocks.append(
+                Block(lang, code, start, skipped=last_nonblank.strip() == SKIP_MARK)
+            )
+            i = j + 1
+            last_nonblank = ""
+            continue
+        if lines[i].strip():
+            last_nonblank = lines[i]
+        i += 1
+    return blocks
+
+
+def test_doc_files_exist():
+    assert (ROOT / "README.md").exists()
+    assert (ROOT / "docs" / "ARCHITECTURE.md").exists()
+    assert (ROOT / "docs" / "BENCHMARKS.md").exists()
+
+
+def test_readme_links_architecture():
+    assert "docs/ARCHITECTURE.md" in (ROOT / "README.md").read_text()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_doc_code_blocks_execute(doc):
+    blocks = [b for b in extract_blocks(doc) if b.lang in ("python", "bash")]
+    runnable = [b for b in blocks if not b.skipped]
+    if not runnable:
+        pytest.skip(f"{doc.name}: no executable blocks")
+    ns = {"__name__": f"docs_smoke[{doc.name}]"}
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+    for b in runnable:
+        where = f"{doc.name}:{b.lineno}"
+        if b.lang == "python":
+            # exec runs in-process (blocks share a namespace), so the
+            # timeout has to come from SIGALRM rather than subprocess.
+            def _alarm(signum, frame, where=where):
+                raise TimeoutError(
+                    f"python block at {where} exceeded {PER_BLOCK_TIMEOUT_S}s"
+                )
+
+            old_handler = signal.signal(signal.SIGALRM, _alarm)
+            signal.alarm(PER_BLOCK_TIMEOUT_S)
+            try:
+                exec(compile(b.code, where, "exec"), ns)  # noqa: S102
+            except Exception as e:  # surface the snippet location
+                pytest.fail(f"python block at {where} failed: {e!r}")
+            finally:
+                signal.alarm(0)
+                signal.signal(signal.SIGALRM, old_handler)
+        else:
+            out = subprocess.run(
+                ["bash", "-ceu", b.code],
+                cwd=ROOT,
+                env=env,
+                capture_output=True,
+                text=True,
+                timeout=PER_BLOCK_TIMEOUT_S,
+            )
+            assert out.returncode == 0, (
+                f"bash block at {where} failed:\n{out.stdout[-1500:]}{out.stderr[-1500:]}"
+            )
+
+
+def test_skip_marker_parsed():
+    """The README's human-workflow quickstart block stays unexecuted."""
+    blocks = extract_blocks(ROOT / "README.md")
+    bash = [b for b in blocks if b.lang == "bash"]
+    assert any(b.skipped for b in bash), "README quickstart should carry the skip marker"
+
+
+if sys.platform == "win32":  # bash-based smoke is POSIX-only
+    test_doc_code_blocks_execute = pytest.mark.skip("POSIX only")(
+        test_doc_code_blocks_execute
+    )

@@ -1,0 +1,147 @@
+"""Streaming shard merge: stream-vs-batch byte identity on every backend,
+windowed metrics parity with full-run summarize, stepped-clock engine
+equivalence, and the record-store window/extend primitives."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    RecordAccumulator,
+    RecordColumns,
+    SimConfig,
+    Simulator,
+    make_scheduler,
+    summarize,
+    summarize_window,
+    summarize_windows,
+)
+from repro.core.shard import ShardedSimulator
+
+pytestmark = pytest.mark.shard
+
+K, W, VUS, DUR, WIN = 3, 9, 18, 15.0, 1.5
+
+
+def _drain_stream(backend, window_s=WIN, **kw):
+    driver = ShardedSimulator(K, W, scheduler="hiku", seed=5, backend=backend)
+    acc = RecordAccumulator()
+    ats, aws, chunks = [], [], []
+    for ch in driver.run_stream(n_vus=VUS, duration_s=DUR, window_s=window_s, **kw):
+        acc.extend(ch.records)
+        ats.append(ch.assign_t)
+        aws.append(ch.assign_w)
+        chunks.append(ch)
+    return acc.columns(), np.concatenate(ats), np.concatenate(aws), chunks
+
+
+@pytest.mark.parametrize("backend", ["serial", "interleaved", "process"])
+def test_stream_byte_identical_to_batch_merge(backend):
+    """Concatenated stream chunks == batch-merged run, per backend."""
+    batch = ShardedSimulator(K, W, scheduler="hiku", seed=5, backend=backend).run(
+        n_vus=VUS, duration_s=DUR
+    )
+    got, at, aw, chunks = _drain_stream(backend)
+    assert len(batch.records) > 0
+    assert got.equals(batch.records)
+    assert np.array_equal(at, batch.assign_t)
+    assert np.array_equal(aw, batch.assign_w)
+    # chunks tile the stream: windows are (t_lo, t_hi], boundaries contiguous
+    for a, b in zip(chunks, chunks[1:]):
+        assert a.t_hi == b.t_lo
+    for ch in chunks:
+        if len(ch.records):
+            assert ch.records.t_done.min() > ch.t_lo or ch.index == 0
+            assert ch.records.t_done.max() <= ch.t_hi
+        assert int(ch.shard_counts.sum()) == len(ch.records)
+
+
+def test_stream_windows_independent_of_window_size():
+    """The merged stream is the same whatever the window width."""
+    a = _drain_stream("serial", window_s=0.7)[0]
+    b = _drain_stream("serial", window_s=4.0)[0]
+    assert a.equals(b)
+
+
+def test_windowed_metrics_match_batch_slices():
+    """summarize_window over live stream chunks == summarize_windows over the
+    completed merged run: same windows, same float values (tolerance 0)."""
+    batch = ShardedSimulator(K, W, scheduler="hiku", seed=5, backend="serial").run(
+        n_vus=VUS, duration_s=DUR
+    )
+    ref = summarize_windows(
+        batch.records, (batch.assign_t, batch.assign_w), batch.workers, WIN, DUR
+    )
+    stream = ShardedSimulator(
+        K, W, scheduler="hiku", seed=5, backend="interleaved"
+    ).run_stream(n_vus=VUS, duration_s=DUR, window_s=WIN)
+    got = [
+        (
+            ch.t_hi,
+            summarize_window(
+                ch.records, (ch.assign_t, ch.assign_w), batch.workers, ch.t_lo, ch.t_hi
+            ),
+        )
+        for ch in stream
+    ]
+    assert len(ref) == len(got) > 1
+    for (t1, m1), (t2, m2) in zip(ref, got):
+        assert t1 == t2
+        assert m1 == m2  # dataclass equality: float-for-float identical
+    # windows tile the run: per-window counts sum to the full-run count
+    full = summarize(batch.records, (batch.assign_t, batch.assign_w), batch.workers, DUR)
+    assert sum(m.n_requests for _, m in got) == full.n_requests
+
+
+def test_stream_on_explicit_programs():
+    """Streaming honors an explicit global VU population (trace-driven path)."""
+    from repro.core import make_functions, make_vu_programs
+
+    programs = make_vu_programs(make_functions(seed=0), VUS, 64, 99)
+    batch = ShardedSimulator(K, W, scheduler="hiku", seed=5, backend="serial").run(
+        n_vus=VUS, duration_s=DUR, programs=programs
+    )
+    got = _drain_stream("serial", programs=programs)[0]
+    assert len(got) and got.equals(batch.records)
+
+
+def test_step_until_reproduces_run_byte_for_byte():
+    """begin + step_until is the same event loop as run (arbitrary slicing)."""
+    s1 = Simulator(make_scheduler("hiku", 5, seed=3), cfg=SimConfig(), seed=3)
+    s1.run(n_vus=20, duration_s=20.0)
+    s2 = Simulator(make_scheduler("hiku", 5, seed=3), cfg=SimConfig(), seed=3)
+    s2.begin(n_vus=20, duration_s=20.0)
+    t, i = 0.0, 0
+    while not s2.done:
+        t += 0.3 + (i % 7) * 0.5  # irregular slice widths
+        i += 1
+        s2.step_until(t)
+    assert s2.record_columns.equals(s1.record_columns)
+    assert s1.n_events == s2.n_events
+    a1, a2 = s1.assignment_columns, s2.assignment_columns
+    assert np.array_equal(a1[0], a2[0]) and np.array_equal(a1[1], a2[1])
+
+
+def test_record_columns_window_views():
+    cols = RecordColumns(
+        t_submit=[0.0, 0.5, 1.0, 1.5],
+        t_done=[1.0, 1.0, 2.0, 3.0],
+        func=[0, 1, 2, 3],
+        worker=[0, 1, 0, 1],
+        cold=[True, False, True, False],
+        vu=[0, 1, 2, 3],
+    )
+    assert cols.window(-np.inf, 1.0).func.tolist() == [0, 1]  # first window
+    assert cols.window(1.0, 2.0).func.tolist() == [2]  # t_lo exclusive
+    assert cols.window(2.0, 10.0).func.tolist() == [3]
+    assert len(cols.window(5.0, 9.0)) == 0
+
+
+def test_accumulator_extend_is_exact():
+    cols = RecordColumns(
+        t_submit=[0.1, 0.2], t_done=[0.3, 0.4], func=[1, 2],
+        worker=[0, 1], cold=[True, False], vu=[5, 6],
+    )
+    acc = RecordAccumulator()
+    acc.extend(cols[:1])
+    acc.extend(cols[1:])
+    assert acc.columns().equals(cols)

@@ -1,0 +1,168 @@
+"""Cross-shard work stealing vs pull-only admission (post-admission imbalance).
+
+Admission-time pull (``bench_admission``) balances what it can *see*: the
+pressure each shard advertises when a VU arrives.  These scenarios are built
+so that signal goes stale after binding — which is exactly the late-binding
+gap work stealing (``core/stealing.py``, ``policy="pull+steal"``) closes:
+
+* ``hot_block`` — a contiguous **delayed-onset hot block**: sleeper VUs
+  whose first request is light and followed by a long nap, after which they
+  hammer heavy functions with near-zero think time
+  (``make_sleeper_programs``).  Napping VUs are invisible to
+  ``Simulator.pressure``, so the admission heap keeps feeding the shards
+  that hold them; when the block wakes, those shards thrash their memory
+  pools and queue behind them while their neighbors idle below the
+  watermark.  Pull-only admission cannot move the queue; stealing drains it
+  across shards.
+* ``wave`` — arrival waves of mixed sleeper/cold VUs: each wave re-binds on
+  whatever pressure the previous wave left behind, compounding placement
+  staleness.
+
+Both scenarios report p99 / cross-shard load CV / migration counts for
+``pull`` vs ``pull+steal`` on identical seeded workloads.  Acceptance
+(pinned by tests/test_stealing.py): on ``hot_block``, ``pull+steal`` shows
+lower p99 AND lower cross-shard load CV than pull-only, and every stolen
+task completes exactly once (conservation).
+"""
+
+from __future__ import annotations
+
+import time
+import warnings
+
+FULL = dict(
+    n_shards=4, n_workers=16, n_vus=64, duration_s=30.0, mem_pool_mb=1024.0,
+    wave_pool_mb=900.0, hot_frac=0.375, quiet_s=(6.0, 9.0), steal_watermark=1.25,
+)
+QUICK = dict(
+    n_shards=2, n_workers=8, n_vus=32, duration_s=14.0, mem_pool_mb=1024.0,
+    wave_pool_mb=900.0, hot_frac=0.375, quiet_s=(3.0, 5.0), steal_watermark=1.25,
+)
+
+
+def hot_block_workload(funcs, p: dict, seed: int):
+    """The delayed-onset hot block: programs + arrivals (deterministic).
+
+    Cold VUs arrive at t=0 and establish steady load; the sleeper block
+    arrives over [1, 4) s so its (pressure-invisible) members concentrate on
+    whichever shards look idlest — the post-admission imbalance seed."""
+    import numpy as np
+
+    from repro.core import default_n_events
+    from repro.core.admission import make_sleeper_programs
+
+    n_vus = p["n_vus"]
+    programs = make_sleeper_programs(
+        funcs, n_vus, default_n_events(p["duration_s"]), seed,
+        hot_frac=p["hot_frac"], quiet_s=p["quiet_s"],
+    )
+    n_hot = int(round(p["hot_frac"] * n_vus))
+    rng = np.random.default_rng((seed, 0xA11CE))
+    arrivals = np.zeros(n_vus)
+    arrivals[:n_hot] = rng.uniform(1.0, 4.0, n_hot)
+    return programs, arrivals
+
+
+def wave_workload(funcs, p: dict, seed: int, n_waves: int = 3):
+    """Arrival waves of mixed sleeper/cold VUs (admission re-binds per wave)."""
+    import numpy as np
+
+    from repro.core import default_n_events
+    from repro.core.admission import make_sleeper_programs
+
+    n_vus = p["n_vus"]
+    programs = make_sleeper_programs(
+        funcs, n_vus, default_n_events(p["duration_s"]), seed + 1,
+        hot_frac=0.5, quiet_s=p["quiet_s"],
+    )
+    wave_gap = p["duration_s"] / (n_waves + 1)
+    arrivals = np.asarray([(vu % n_waves) * wave_gap for vu in range(n_vus)])
+    return programs, arrivals
+
+
+def _fmt(run, metrics) -> str:
+    return (
+        f"shard_cv={run.shard_load_cv:.3f};p99_ms={metrics.p99_ms:.0f};"
+        f"mean_ms={metrics.mean_latency_ms:.0f};cold={metrics.cold_rate:.3f};"
+        f"migrations={run.n_migrations};migrated_rate={metrics.migrated_rate:.4f};"
+        f"requests={metrics.n_requests}"
+    )
+
+
+def run_scenario(scenario: str, p: dict, seed: int = 0):
+    """Run one scenario under both policies; returns {policy: (run, metrics)}."""
+    from repro.core import SimConfig
+    from repro.core.admission import AdmissionConfig, AdmissionSimulator
+
+    pool = p["wave_pool_mb"] if scenario == "wave" else p["mem_pool_mb"]
+    cfg = SimConfig(mem_pool_mb=pool)
+    out = {}
+    for policy in ("pull", "pull+steal"):
+        adm = AdmissionSimulator(
+            p["n_shards"], p["n_workers"], scheduler="hiku", cfg=cfg, seed=seed,
+            admission=AdmissionConfig(
+                policy=policy, steal_watermark=p["steal_watermark"]
+            ),
+        )
+        build = hot_block_workload if scenario == "hot_block" else wave_workload
+        programs, arrivals = build(adm.funcs, p, seed)
+        with warnings.catch_warnings():
+            # backpressured waves may leave VUs unadmitted; that's the
+            # scenario, not a bug — keep the bench output clean
+            warnings.simplefilter("ignore", RuntimeWarning)
+            r = adm.run(
+                p["n_vus"], p["duration_s"], programs=programs, arrivals=arrivals
+            )
+        out[policy] = (r, r.summarize(p["duration_s"]))
+    return out
+
+
+def run(quick: bool = False):
+    from .common import save_json
+
+    p = QUICK if quick else FULL
+    seed = 0
+    rows = []
+    payload = {"params": {**p, "quiet_s": list(p["quiet_s"])}}
+    for scenario in ("hot_block", "wave"):
+        t0 = time.perf_counter()
+        res = run_scenario(scenario, p, seed=seed)
+        wall = time.perf_counter() - t0
+        (r_pull, m_pull), (r_steal, m_steal) = res["pull"], res["pull+steal"]
+        for policy, (r, m) in res.items():
+            rows.append(
+                (
+                    f"stealing/{scenario}/{policy}",
+                    wall / 2 / max(m.n_requests, 1) * 1e6,
+                    _fmt(r, m),
+                )
+            )
+        rows.append(
+            (
+                f"stealing/{scenario}/delta",
+                0.0,
+                f"p99_pull={m_pull.p99_ms:.0f};p99_steal={m_steal.p99_ms:.0f};"
+                f"cv_pull={r_pull.shard_load_cv:.3f};cv_steal={r_steal.shard_load_cv:.3f};"
+                f"migrations={r_steal.n_migrations}",
+            )
+        )
+        payload[scenario] = {
+            pol.replace("+", "_"): {
+                "shard_requests": r.shard_requests.tolist(),
+                "cv": r.shard_load_cv,
+                "p99_ms": m.p99_ms,
+                "cold_rate": m.cold_rate,
+                "migrations": r.n_migrations,
+                "migrated_rate": m.migrated_rate,
+                "stolen_in": [s.stolen_in for s in r.shards],
+                "stolen_out": [s.stolen_out for s in r.shards],
+            }
+            for pol, (r, m) in res.items()
+        }
+    save_json("stealing", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

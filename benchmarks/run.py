@@ -39,6 +39,7 @@ def main(argv=None) -> None:
         bench_pull_dispatch,
         bench_shard_scale,
         bench_sim_speed,
+        bench_stealing,
         bench_table1,
         bench_trace,
         bench_throughput,
@@ -62,6 +63,7 @@ def main(argv=None) -> None:
         "sim_speed": bench_sim_speed,
         "shard_scale": bench_shard_scale,
         "admission": bench_admission,
+        "stealing": bench_stealing,
     }
     if args.only:
         keep = set(args.only.split(","))

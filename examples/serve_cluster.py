@@ -25,6 +25,7 @@ from repro.core import (
     SimConfig,
     Simulator,
     default_n_events,
+    make_functions,
     make_scheduler,
     summarize,
 )
@@ -116,6 +117,40 @@ def admission_tier(quick: bool, n_shards: int):
                   f"cold {m.cold_rate:5.1%}, per-shard {chunk.shard_counts.tolist()}")
 
 
+def work_stealing(quick: bool, n_shards: int):
+    from repro.core.admission import (
+        AdmissionConfig,
+        AdmissionSimulator,
+        make_sleeper_programs,
+    )
+
+    n_workers, n_vus, dur = (8, 32, 14.0) if quick else (16, 64, 30.0)
+    n_shards = min(n_shards, n_workers)
+    nap = (3.0, 5.0) if quick else (6.0, 9.0)
+    print(f"\n== cross-shard work stealing: {n_shards} shards, {n_workers} "
+          f"workers, {n_vus} VUs (37.5% delayed-onset hot block), {dur:.0f}s ==")
+    cfg = SimConfig(mem_pool_mb=1024.0)
+    programs = make_sleeper_programs(
+        make_functions(seed=0), n_vus,
+        default_n_events(dur), 0, hot_frac=0.375, quiet_s=nap)
+    n_hot = int(round(0.375 * n_vus))
+    arrivals = np.zeros(n_vus)
+    arrivals[:n_hot] = np.random.default_rng((0, 0xA11CE)).uniform(1.0, 4.0, n_hot)
+    for policy in ("pull", "pull+steal"):
+        adm = AdmissionSimulator(
+            n_shards, n_workers, scheduler="hiku", cfg=cfg, seed=0,
+            admission=AdmissionConfig(policy=policy, steal_watermark=1.25))
+        r = adm.run(n_vus, dur, programs=programs, arrivals=arrivals)
+        m = r.summarize(dur)
+        extra = ""
+        if policy == "pull+steal":
+            extra = (f", {r.n_migrations} migrations "
+                     f"(in/out {[(s.stolen_in, s.stolen_out) for s in r.shards]})")
+        print(f"  {policy:10s}: per-shard requests {r.shard_requests.tolist()} "
+              f"(cross-shard CV {r.shard_load_cv:.2f}), p99 {m.p99_ms:.0f} ms"
+              f"{extra}")
+
+
 def serve_real_batched(quick: bool):
     print("\n== real-model serving with batched requests + failure/elastic ==")
     cfg = get_config("minicpm_2b").reduced()
@@ -150,4 +185,5 @@ if __name__ == "__main__":
     replay_paper_protocol(args.quick)
     sharded_scale_out(args.quick, args.shards)
     admission_tier(args.quick, args.shards)
+    work_stealing(args.quick, args.shards)
     serve_real_batched(args.quick)

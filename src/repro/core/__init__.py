@@ -15,7 +15,9 @@ end-to-end tour; each symbol's docstring states which contracts bind it):
 * scale-out — ``ShardedSimulator``/``ShardSpec``/``ShardResult``/
   ``MergedRun``/``StreamChunk``/``shard_seed`` (static K-shard partition +
   batch/streaming merge), ``AdmissionSimulator``/``AdmissionConfig``/
-  ``AdmissionRun`` (global pull-based admission tier);
+  ``AdmissionRun`` (global pull-based admission tier),
+  ``StolenTask``/``Migration``/``steal_tick`` (cross-shard work stealing
+  over the admission co-run);
 * JAX form — ``JIQState``/``init_state``/``sched_step``/``sched_many``/
   ``sched_many_fused`` + the ``ARRIVAL``/``FINISH``/``EVICT`` event kinds
   (vectorized Algorithm 1, Pallas-fused on TPU).
@@ -58,7 +60,8 @@ from .shard import (
     StreamChunk,
     shard_seed,
 )
-from .simulator import SimConfig, Simulator
+from .simulator import SimConfig, Simulator, StolenTask
+from .stealing import Migration, steal_tick
 from .trace import FunctionSpec, default_n_events, make_functions, make_vu_programs
 
 __all__ = [
@@ -73,6 +76,7 @@ __all__ = [
     "HikuScheduler",
     "JIQState",
     "MergedRun",
+    "Migration",
     "RecordAccumulator",
     "RecordColumns",
     "RequestRecord",
@@ -83,6 +87,7 @@ __all__ = [
     "ShardedSimulator",
     "SimConfig",
     "Simulator",
+    "StolenTask",
     "StreamChunk",
     "available_schedulers",
     "init_state",
@@ -96,6 +101,7 @@ __all__ = [
     "sched_many_fused",
     "sched_step",
     "shard_seed",
+    "steal_tick",
     "summarize",
     "summarize_window",
     "summarize_windows",

@@ -28,11 +28,21 @@ follows the shard merge contract: worker ids remapped by shard offsets,
 VU local ids mapped through the admission-order table, streams stable-merged
 by completion time with shard-index tie-break.
 
+Admission binds a VU once.  ``policy="pull+steal"`` extends the pull loop
+past that binding with cross-shard **work stealing** (``core.stealing``):
+each tick, after admission pulls, queued tasks migrate from shards above
+``steal_watermark`` to shards below the pull watermark — the same
+pressure-keyed heap run in both directions.  Migrations carry the VU's
+bit-exact service identity and are recorded in the ``migrated`` record
+column and the run's ``migrations`` telemetry.
+
 The static partition (``ShardedSimulator``) remains the default and is
 byte-identical to the frozen seed engine; the admission tier is a new
 opt-in scenario with its own (still deterministic, still seeded) streams.
 ``benchmarks/bench_admission.py`` measures both on skewed/bursty arrival
-populations the static partition cannot balance.
+populations the static partition cannot balance, and
+``benchmarks/bench_stealing.py`` measures what stealing adds on
+*post-admission* imbalance.
 """
 
 from __future__ import annotations
@@ -40,6 +50,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
+import warnings
 from collections import deque
 from typing import List, Optional, Sequence, Tuple
 
@@ -50,6 +61,7 @@ from .records import RecordColumns
 from .scheduler import make_scheduler
 from .shard import merge_assignments, merge_window, shard_seed, split_even
 from .simulator import SimConfig, Simulator
+from .stealing import Migration, steal_tick
 from .trace import (
     FunctionSpec,
     VUProgram,
@@ -65,6 +77,7 @@ __all__ = [
     "AdmissionSimulator",
     "load_cv_across_shards",
     "make_skewed_programs",
+    "make_sleeper_programs",
 ]
 
 
@@ -82,17 +95,28 @@ class AdmissionConfig:
             stepped in lockstep between pulls, so this bounds how stale the
             pressure signal can be.
         batch_size: optional hard cap on VUs bound per shard per tick,
-            honored by both policies (None: ``pull`` is watermark-limited
+            honored by every policy (None: ``pull`` is watermark-limited
             only; ``round_robin`` drains the eligible queue each tick).
-        policy: ``"pull"`` (pressure-ordered, the tentpole) or
-            ``"round_robin"`` (bind each arrival to the next shard in
-            cyclic order immediately — the arrival-capable static baseline).
+        policy: ``"pull"`` (pressure-ordered admission), ``"pull+steal"``
+            (pull admission plus per-tick cross-shard work stealing — see
+            ``core.stealing``) or ``"round_robin"`` (bind each arrival to
+            the next shard in cyclic order immediately — the
+            arrival-capable static baseline).
+        steal_watermark: pressure above which a shard's queued tasks may be
+            stolen (``pull+steal`` only).  Must be >= ``watermark`` so a
+            shard can never be victim and thief in the same tick; the band
+            between the two watermarks is the hysteresis that keeps
+            near-balanced shards from churning migrations.
+        steal_batch: optional hard cap on migrations per tick
+            (``pull+steal`` only; None: the two heaps limit the tick).
     """
 
     watermark: float = 0.75
     tick_s: float = 0.25
     batch_size: Optional[int] = None
     policy: str = "pull"
+    steal_watermark: float = 1.5
+    steal_batch: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -114,6 +138,8 @@ class AdmissionShard:
     assign_t: np.ndarray
     assign_w: np.ndarray
     n_events: int
+    stolen_out: int = 0  # queued tasks other shards stole from this one
+    stolen_in: int = 0  # stolen tasks this shard received and re-injected
 
 
 @dataclasses.dataclass
@@ -131,6 +157,12 @@ class AdmissionRun:
     unadmitted: int  # VUs still waiting (or never eligible) at the deadline
     queue_t: np.ndarray  # admission-queue depth telemetry: sample times (s)
     queue_depth: np.ndarray  # eligible-but-unadmitted VUs at each sample
+    migrations: List[Migration] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_migrations(self) -> int:
+        """Cross-shard task migrations performed (``pull+steal`` only)."""
+        return len(self.migrations)
 
     @property
     def shard_requests(self) -> np.ndarray:
@@ -194,6 +226,49 @@ def make_skewed_programs(
     return programs
 
 
+def make_sleeper_programs(
+    funcs: Sequence[FunctionSpec],
+    n_vus: int,
+    n_events: int,
+    seed: int,
+    hot_frac: float = 0.25,
+    quiet_s: Tuple[float, float] = (4.0, 6.0),
+    hot_think: Tuple[float, float] = (0.02, 0.1),
+    cold_think: Tuple[float, float] = (1.0, 3.0),
+) -> List[VUProgram]:
+    """A *post-admission* imbalance workload: sleepers that turn hot.
+
+    The first ``hot_frac`` of VUs are **sleepers**: their first request is
+    light and followed by a long ``quiet_s`` think, after which they hammer
+    heavy functions with near-zero think time.  At admission time a sleeper
+    is indistinguishable from a cold VU — it contributes almost nothing to
+    ``Simulator.pressure`` — so pressure-keyed admission necessarily places
+    them by *current* load, and whichever shards took more sleepers blow up
+    only after binding.  That is exactly the imbalance admission-time pull
+    cannot fix and cross-shard work stealing (``policy="pull+steal"``) can.
+    Deterministic per ``(seed, vu)`` like the other generators.
+    """
+    warm = np.asarray([f.warm_ms for f in funcs])
+    heavy = np.flatnonzero(warm >= np.median(warm))
+    light = np.flatnonzero(warm <= np.median(warm))
+    weights = np.asarray([f.weight for f in funcs])
+    weights = weights / weights.sum()
+    n_hot = int(round(hot_frac * n_vus))
+    programs = []
+    for vu in range(n_vus):
+        rng = np.random.default_rng((seed, vu))
+        if vu < n_hot:
+            idx = heavy[rng.integers(0, len(heavy), size=n_events)]
+            sleep = rng.uniform(*hot_think, size=n_events)
+            idx[0] = light[rng.integers(0, len(light))]  # light first touch
+            sleep[0] = rng.uniform(*quiet_s)  # ... then the long nap
+        else:
+            idx = rng.choice(len(funcs), size=n_events, p=weights)
+            sleep = rng.uniform(*cold_think, size=n_events)
+        programs.append(VUProgram(np.asarray(idx), sleep))
+    return programs
+
+
 class AdmissionSimulator:
     """K shard simulators behind ONE pull-based global admission queue.
 
@@ -234,16 +309,26 @@ class AdmissionSimulator:
         self.cfg = cfg or SimConfig()
         self.seed = int(seed)
         self.admission = admission or AdmissionConfig()
-        if self.admission.policy not in ("pull", "round_robin"):
+        if self.admission.policy not in ("pull", "pull+steal", "round_robin"):
             raise ValueError(f"unknown admission policy {self.admission.policy!r}")
         if self.admission.tick_s <= 0:
             raise ValueError("tick_s must be > 0")
         if self.admission.batch_size is not None and self.admission.batch_size < 1:
             raise ValueError("batch_size must be >= 1 (or None for uncapped)")
+        if self.admission.policy == "pull+steal":
+            if self.admission.steal_watermark < self.admission.watermark:
+                raise ValueError(
+                    "steal_watermark must be >= watermark (a shard must never "
+                    "be steal victim and pull thief at once)"
+                )
+            if self.admission.steal_batch is not None and self.admission.steal_batch < 1:
+                raise ValueError("steal_batch must be >= 1 (or None for uncapped)")
         self.worker_split = split_even(self.n_workers, self.n_shards)
         self.worker_offsets = [0]
         for n in self.worker_split:
             self.worker_offsets.append(self.worker_offsets[-1] + n)
+        # per-shard effective-pressure increment per admitted/stolen VU
+        self.inv_workers = [1.0 / max(n, 1) for n in self.worker_split]
         self.funcs = make_functions(seed=self.seed)
 
     # ----------------------------------------------------------------- run
@@ -271,9 +356,14 @@ class AdmissionSimulator:
                 admitted and count as unadmitted.  Shrink ``tick_s`` to
                 shrink that end-of-run blind window.
 
+        Any VU still unadmitted at the deadline is reported on
+        ``AdmissionRun.unadmitted`` and raises a ``RuntimeWarning`` — a
+        silently shrunken population is a bug magnet in benchmarks.
+
         Deterministic for fixed inputs: the admission loop advances
         simulated time in ``tick_s`` slices, and pull order is a total
-        order (pressure, shard index).
+        order (pressure, shard index); under ``pull+steal`` the steal
+        schedule is equally a total order (see ``core.stealing``).
         """
         adm = self.admission
         if programs is None:
@@ -307,6 +397,7 @@ class AdmissionSimulator:
         admitted: List[List[int]] = [[] for _ in range(self.n_shards)]
         admit_t: List[List[float]] = [[] for _ in range(self.n_shards)]
         pulls = [0] * self.n_shards
+        migrations: List[Migration] = []
         waiting: deque = deque()
         qpos = 0
         rr_next = 0  # round_robin cursor
@@ -339,6 +430,22 @@ class AdmissionSimulator:
                         pulls[k] += 1
                 else:
                     self._pull_tick(t, sims, programs, waiting, admitted, admit_t, pulls)
+            if adm.policy == "pull+steal" and t < duration_s:
+                # post-admission rebalance: the pull heap run in reverse too
+                moves = steal_tick(
+                    sims,
+                    steal_watermark=adm.steal_watermark,
+                    pull_watermark=adm.watermark,
+                    inv_workers=self.inv_workers,
+                    t=t,
+                    max_moves=adm.steal_batch,
+                )
+                for mv in moves:
+                    gid = admitted[mv.src][mv.src_vu]
+                    assert mv.dst_vu == len(admitted[mv.dst])
+                    admitted[mv.dst].append(gid)
+                    admit_t[mv.dst].append(t)
+                migrations.extend(moves)
             queue_t.append(t)
             queue_depth.append(len(waiting))
             if t >= duration_s and all(s.done for s in sims):
@@ -349,7 +456,8 @@ class AdmissionSimulator:
                 sim.step_until(t)
         wall_s = time.perf_counter() - t0
         return self._merge(
-            sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth
+            sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
+            migrations,
         )
 
     def _pull_tick(self, t, sims, programs, waiting, admitted, admit_t, pulls) -> None:
@@ -357,7 +465,7 @@ class AdmissionSimulator:
         first, until every shard sits at its watermark (or the queue/batch
         cap empties).  The shard heap is the cluster-level ``PQ_f``."""
         adm = self.admission
-        inv_w = [1.0 / max(n, 1) for n in self.worker_split]
+        inv_w = self.inv_workers
         tick_pulls = [0] * self.n_shards
         heap = [(sims[k].pressure(), k) for k in range(self.n_shards)]
         heapq.heapify(heap)
@@ -380,7 +488,8 @@ class AdmissionSimulator:
                 heapq.heapreplace(heap, (p + inv_w[k], k))
 
     def _merge(
-        self, sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth
+        self, sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
+        migrations,
     ) -> AdmissionRun:
         shards: List[AdmissionShard] = []
         parts: List[RecordColumns] = []
@@ -402,6 +511,8 @@ class AdmissionSimulator:
                     assign_t=at,
                     assign_w=aw,
                     n_events=sim.n_events,
+                    stolen_out=sim.stolen_out,
+                    stolen_in=sim.stolen_in,
                 )
             )
             parts.append(cols.remap(worker_offset=self.worker_offsets[k]).remap_vus(vu_map))
@@ -409,7 +520,20 @@ class AdmissionSimulator:
             aws.append(aw + self.worker_offsets[k])
         records = merge_window(parts)
         at, aw = merge_assignments(ats, aws)
-        n_admitted = sum(len(a) for a in admitted)
+        # a migrated VU appears in both the victim's and the receiver's
+        # admission tables; the global population counts it once
+        unique_admitted = len({g for a in admitted for g in a})
+        unadmitted = n_vus - unique_admitted
+        if unadmitted > 0:
+            warnings.warn(
+                f"{unadmitted} of {n_vus} VUs were never admitted (arrival in "
+                "the end-of-run blind window, or watermark backpressure held "
+                "them in the queue past the deadline); see "
+                "AdmissionRun.unadmitted and the `arrivals` docs on "
+                "AdmissionSimulator.run",
+                RuntimeWarning,
+                stacklevel=3,
+            )
         return AdmissionRun(
             shards=shards,
             records=records,
@@ -418,8 +542,9 @@ class AdmissionSimulator:
             workers=list(range(self.n_workers)),
             n_events=sum(s.n_events for s in sims),
             wall_s=wall_s,
-            admitted=n_admitted,
-            unadmitted=n_vus - n_admitted,
+            admitted=unique_admitted,
+            unadmitted=unadmitted,
             queue_t=np.asarray(queue_t),
             queue_depth=np.asarray(queue_depth, np.int64),
+            migrations=list(migrations),
         )

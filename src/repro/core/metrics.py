@@ -30,8 +30,11 @@ class RunMetrics:
     Latencies in milliseconds; ``cold_rate`` is the cold-start fraction in
     [0, 1]; ``throughput_rps`` is requests per second over the summarized
     duration; ``load_cv`` is the mean per-second coefficient of variation
-    of assignments across workers (Figure 14).  Dataclass equality is exact
-    float equality — the windowed-metrics parity tests rely on that."""
+    of assignments across workers (Figure 14); ``migrated_rate`` is the
+    fraction of requests completed on a shard other than their binding one
+    (cross-shard work stealing; 0.0 whenever stealing is off).  Dataclass
+    equality is exact float equality — the windowed-metrics parity tests
+    rely on that."""
 
     n_requests: int
     mean_latency_ms: float
@@ -42,6 +45,7 @@ class RunMetrics:
     cold_rate: float
     throughput_rps: float
     load_cv: float  # avg coefficient of variation of assignments/worker/second
+    migrated_rate: float = 0.0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -141,6 +145,7 @@ def summarize(
     n = len(cols)
     lat = cols.latency_ms if n else np.zeros(1)
     cold = cols.cold if n else np.zeros(1)
+    migrated = cols.migrated if n else np.zeros(1)
     cv = load_cv_per_second(assignments, workers, duration_s)
     return RunMetrics(
         n_requests=n,
@@ -152,6 +157,7 @@ def summarize(
         cold_rate=float(cold.mean()),
         throughput_rps=n / max(duration_s, 1e-9),
         load_cv=float(cv.mean()) if cv.size else 0.0,
+        migrated_rate=float(migrated.mean()),
     )
 
 

@@ -7,7 +7,7 @@ Python objects dominate memory at millions of requests, every metric pays a
 Python-loop extraction, and shipping shard results between processes pickles
 object graphs instead of buffers.
 
-This module stores the same stream as six parallel columns::
+This module stores the same stream as seven parallel columns::
 
     t_submit  float64   submission time (s)
     t_done    float64   completion time incl. scheduler overhead (s)
@@ -15,6 +15,8 @@ This module stores the same stream as six parallel columns::
     worker    int32     worker id (shard-local until merged)
     cold      bool      cold-start flag
     vu        int32     virtual-user id (shard-local until merged)
+    migrated  bool      completed on a shard other than the binding one
+                        (cross-shard work stealing; always False without it)
 
 Contracts:
 
@@ -42,7 +44,10 @@ import numpy as np
 
 
 class RequestRecord(NamedTuple):
-    """One completed request (the legacy row API, kept as the adapter)."""
+    """One completed request (the legacy row API, kept as the adapter).
+
+    ``migrated`` defaults to False so 6-field legacy rows (the frozen seed
+    engine's NamedTuples, pre-stealing pickles) adapt losslessly."""
 
     t_submit: float
     t_complete: float
@@ -50,6 +55,7 @@ class RequestRecord(NamedTuple):
     worker: int
     cold: bool
     vu: int
+    migrated: bool = False
 
     @property
     def latency_ms(self) -> float:
@@ -65,25 +71,28 @@ REC_DTYPE = np.dtype(
         ("worker", "<i4"),
         ("cold", "?"),
         ("vu", "<i4"),
+        ("migrated", "?"),
     ]
 )
 
-_FIELDS = ("t_submit", "t_done", "func", "worker", "cold", "vu")
-_COL_DTYPES = (np.float64, np.float64, np.int32, np.int32, np.bool_, np.int32)
+_FIELDS = ("t_submit", "t_done", "func", "worker", "cold", "vu", "migrated")
+_COL_DTYPES = (np.float64, np.float64, np.int32, np.int32, np.bool_, np.int32, np.bool_)
 
 
 class RecordColumns:
-    """Six parallel numpy columns over a request-record stream.
+    """Seven parallel numpy columns over a request-record stream.
 
     Column units: times in seconds (float64 — the exact doubles the engine
-    produced; byte-fidelity contract), memory-free ids as int32, ``cold``
-    as bool.  Completion order is preserved; only ``concat``/``take`` (and
-    the searchsorted-based ``window`` view) reorder, explicitly.  Worker
-    and VU ids are shard-local until remapped (``remap``/``remap_vus``)."""
+    produced; byte-fidelity contract), memory-free ids as int32, ``cold``/
+    ``migrated`` as bool.  Completion order is preserved; only ``concat``/
+    ``take`` (and the searchsorted-based ``window`` view) reorder,
+    explicitly.  Worker and VU ids are shard-local until remapped
+    (``remap``/``remap_vus``).  ``migrated`` defaults to all-False so
+    6-column call sites (pre-work-stealing streams) stay valid."""
 
     __slots__ = _FIELDS
 
-    def __init__(self, t_submit, t_done, func, worker, cold, vu):
+    def __init__(self, t_submit, t_done, func, worker, cold, vu, migrated=None):
         self.t_submit = np.asarray(t_submit, np.float64)
         self.t_done = np.asarray(t_done, np.float64)
         self.func = np.asarray(func, np.int32)
@@ -91,6 +100,9 @@ class RecordColumns:
         self.cold = np.asarray(cold, np.bool_)
         self.vu = np.asarray(vu, np.int32)
         n = self.t_submit.shape[0]
+        self.migrated = (
+            np.zeros(n, np.bool_) if migrated is None else np.asarray(migrated, np.bool_)
+        )
         for name in _FIELDS[1:]:
             if getattr(self, name).shape != (n,):
                 raise ValueError(f"column {name!r} length != {n}")
@@ -122,6 +134,7 @@ class RecordColumns:
                 self.worker.tolist(),
                 self.cold.tolist(),
                 self.vu.tolist(),
+                self.migrated.tolist(),
             )
         ]
 
@@ -138,9 +151,21 @@ class RecordColumns:
 
     @classmethod
     def from_structured(cls, arr: np.ndarray) -> "RecordColumns":
-        if arr.dtype != REC_DTYPE:
-            arr = arr.astype(REC_DTYPE)
-        return cls(*(arr[name] for name in _FIELDS))
+        """Unpack a structured array, matching fields by name.
+
+        Only ``migrated`` may be absent (pre-work-stealing captures default
+        it to False); any other missing field is data corruption and raises.
+        """
+        names = arr.dtype.names or ()
+        missing = [n for n in _FIELDS[:6] if n not in names]
+        if missing:
+            raise ValueError(f"structured record array lacks fields {missing}")
+        return cls(
+            *(
+                arr[name] if name in names else np.zeros(len(arr), dt)
+                for name, dt in zip(_FIELDS, _COL_DTYPES)
+            )
+        )
 
     # -------------------------------------------------------------- protocol
     def __len__(self) -> int:
@@ -158,6 +183,7 @@ class RecordColumns:
                 int(self.worker[i]),
                 bool(self.cold[i]),
                 int(self.vu[i]),
+                bool(self.migrated[i]),
             )
         return RecordColumns(*(getattr(self, name)[i] for name in _FIELDS))
 
@@ -196,6 +222,7 @@ class RecordColumns:
             self.worker + np.int32(worker_offset),
             self.cold,
             self.vu + np.int32(vu_offset),
+            self.migrated,
         )
 
     def remap_vus(self, vu_map: np.ndarray) -> "RecordColumns":
@@ -205,7 +232,8 @@ class RecordColumns:
         offset range."""
         vu_map = np.asarray(vu_map, np.int32)
         return RecordColumns(
-            self.t_submit, self.t_done, self.func, self.worker, self.cold, vu_map[self.vu]
+            self.t_submit, self.t_done, self.func, self.worker, self.cold,
+            vu_map[self.vu], self.migrated,
         )
 
     def window(self, t_lo: float, t_hi: float) -> "RecordColumns":
@@ -232,7 +260,7 @@ class RecordAccumulator:
     by construction (no float round-trip at all on the list path).
     """
 
-    __slots__ = ("t_submit", "t_done", "func", "worker", "cold", "vu")
+    __slots__ = ("t_submit", "t_done", "func", "worker", "cold", "vu", "migrated")
 
     def __init__(self):
         self.t_submit: List[float] = []
@@ -241,14 +269,16 @@ class RecordAccumulator:
         self.worker: List[int] = []
         self.cold: List[bool] = []
         self.vu: List[int] = []
+        self.migrated: List[bool] = []
 
-    def append(self, t_submit, t_done, func, worker, cold, vu) -> None:
+    def append(self, t_submit, t_done, func, worker, cold, vu, migrated=False) -> None:
         self.t_submit.append(t_submit)
         self.t_done.append(t_done)
         self.func.append(func)
         self.worker.append(worker)
         self.cold.append(cold)
         self.vu.append(vu)
+        self.migrated.append(migrated)
 
     def extend(self, cols: RecordColumns) -> None:
         """Append a columnar chunk (the streaming-merge consumer path).
@@ -262,20 +292,23 @@ class RecordAccumulator:
         self.worker.extend(cols.worker.tolist())
         self.cold.extend(cols.cold.tolist())
         self.vu.extend(cols.vu.tolist())
+        self.migrated.extend(cols.migrated.tolist())
 
     def __len__(self) -> int:
         return len(self.t_submit)
 
     def columns(self) -> RecordColumns:
         return RecordColumns(
-            self.t_submit, self.t_done, self.func, self.worker, self.cold, self.vu
+            self.t_submit, self.t_done, self.func, self.worker, self.cold, self.vu,
+            self.migrated,
         )
 
     def to_records(self) -> List[RequestRecord]:
         return [
             RequestRecord(*row)
             for row in zip(
-                self.t_submit, self.t_done, self.func, self.worker, self.cold, self.vu
+                self.t_submit, self.t_done, self.func, self.worker, self.cold, self.vu,
+                self.migrated,
             )
         ]
 

@@ -274,7 +274,7 @@ class _StreamCursor:
 
     def __init__(self, td, cols, at, aw):
         self.td = td  # t_done sequence, ascending
-        self.cols = cols  # 6-tuple of parallel column sequences
+        self.cols = cols  # 7-tuple of parallel column sequences
         self.at = at  # assignment times, ascending
         self.aw = aw
         self.ri = 0
@@ -301,7 +301,7 @@ class _StreamCursor:
 def _cursor_for_result(res: ShardResult) -> _StreamCursor:
     c = res.records
     return _StreamCursor(
-        c.t_done, (c.t_submit, c.t_done, c.func, c.worker, c.cold, c.vu),
+        c.t_done, (c.t_submit, c.t_done, c.func, c.worker, c.cold, c.vu, c.migrated),
         res.assign_t, res.assign_w,
     )
 
@@ -309,7 +309,8 @@ def _cursor_for_result(res: ShardResult) -> _StreamCursor:
 def _cursor_for_sim(sim: Simulator) -> _StreamCursor:
     acc = sim._rec
     return _StreamCursor(
-        acc.t_done, (acc.t_submit, acc.t_done, acc.func, acc.worker, acc.cold, acc.vu),
+        acc.t_done,
+        (acc.t_submit, acc.t_done, acc.func, acc.worker, acc.cold, acc.vu, acc.migrated),
         sim._asg_t, sim._asg_w,
     )
 
@@ -441,12 +442,13 @@ class ShardedSimulator:
             ``"auto"``; all backends produce identical per-shard streams.
 
     Elasticity and fault injection stay per-shard (each shard is an
-    independent cluster): ``inject_failure`` takes a *global* worker id and
-    maps it onto the owning shard via the static partition;
-    ``inject_worker`` re-registers a worker on an explicit shard.  Added
-    local ids must fall inside the shard's static span (i.e. elastic joins
-    are re-joins of failed workers) — ids beyond the span would remap into
-    the *next* shard's global range after the merge, so they are rejected.
+    independent cluster): ``inject_failure`` and ``inject_worker`` both take
+    a *global* worker id and map it onto the owning shard via the static
+    partition (the legacy ``inject_worker(t, local_id, shard=k)`` form is
+    still accepted but deprecated).  Because global ids live inside a
+    shard's static span by construction, elastic joins are re-joins of
+    failed workers — ids beyond the partition would remap into the *next*
+    shard's global range after the merge, so they are rejected.
     """
 
     def __init__(
@@ -487,19 +489,41 @@ class ShardedSimulator:
         raise ValueError(f"worker {worker} outside the static partition")
 
     def inject_failure(self, t: float, worker: int) -> None:
+        """Schedule a worker failure at time ``t`` by *global* worker id."""
         k, local = self.shard_of_worker(worker)
         self._failures.append((k, t, local))
 
-    def inject_worker(self, t: float, local_worker: int, shard: int = 0) -> None:
-        if not 0 <= shard < self.n_shards:
-            raise ValueError(f"shard {shard} out of range")
-        if not 0 <= local_worker < self.worker_split[shard]:
-            raise ValueError(
-                f"local worker {local_worker} outside shard {shard}'s static "
-                f"span of {self.worker_split[shard]} ids; global-id merge "
-                "remapping only covers re-joins within the span"
+    def inject_worker(self, t: float, worker: int, shard: Optional[int] = None) -> None:
+        """Schedule an (elastic re-)join at time ``t`` by *global* worker id.
+
+        Unified with :meth:`inject_failure`: the global id resolves to
+        ``(owning shard, local id)`` through the static partition, so
+        ``inject_failure(t1, w)`` + ``inject_worker(t2, w)`` round-trips the
+        same physical worker.  The pre-unification form
+        ``inject_worker(t, local_id, shard=k)`` still works but is
+        deprecated (``DeprecationWarning``); ids outside the partition are
+        rejected in both forms because the merge remap only covers the
+        static spans.
+        """
+        if shard is None:
+            k, local = self.shard_of_worker(worker)
+        else:
+            warnings.warn(
+                "inject_worker(t, local_id, shard=k) is deprecated; pass the "
+                "global worker id (unified with inject_failure)",
+                DeprecationWarning,
+                stacklevel=2,
             )
-        self._additions.append((shard, t, local_worker))
+            if not 0 <= shard < self.n_shards:
+                raise ValueError(f"shard {shard} out of range")
+            if not 0 <= worker < self.worker_split[shard]:
+                raise ValueError(
+                    f"local worker {worker} outside shard {shard}'s static "
+                    f"span of {self.worker_split[shard]} ids; global-id merge "
+                    "remapping only covers re-joins within the span"
+                )
+            k, local = shard, worker
+        self._additions.append((k, t, local))
 
     # ---------------------------------------------------------------- plan
     def plan(

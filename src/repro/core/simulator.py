@@ -109,7 +109,7 @@ class SimConfig:
 
 # RequestRecord lives in core.records now; re-exported here for the legacy
 # import path (``from repro.core.simulator import RequestRecord``).
-__all__ = ["RequestRecord", "SimConfig", "Simulator"]
+__all__ = ["RequestRecord", "SimConfig", "Simulator", "StolenTask"]
 
 
 # integer event kinds; the *push order* (and with it the tie-breaking
@@ -127,7 +127,10 @@ class _Instance:
 
 
 class _Task:
-    __slots__ = ("func", "vu", "ev_idx", "t_submit", "work_s", "remaining_s", "cold", "worker")
+    __slots__ = (
+        "func", "vu", "ev_idx", "t_submit", "work_s", "remaining_s", "cold",
+        "worker", "migrated",
+    )
 
     def __init__(self, func: int, vu: int, ev_idx: int, t_submit: float):
         self.func = func
@@ -138,6 +141,7 @@ class _Task:
         self.remaining_s = 0.0
         self.cold = False
         self.worker = -1
+        self.migrated = False  # re-injected by cross-shard work stealing
 
 
 class _Worker:
@@ -245,9 +249,50 @@ class _Worker:
 
 
 # Shared fluctuation bands: (seed, n_vus, sigma) -> {"cols": int, "rows":
-# list-of-lists}.  Rows are grown in place, so the 4-scheduler benchmark
-# matrix pays for each (seed, vu, ev) draw once, not once per scheduler.
+# list-of-lists, "pending": set-of-row-indices}.  Rows are grown in place, so
+# the 4-scheduler benchmark matrix pays for each (seed, vu, ev) draw once, not
+# once per scheduler.  "pending" rows were appended empty by ``admit_vu`` and
+# are filled lazily in batch (``_flush_fluct``) — deterministic regardless of
+# which sharing simulator flushes, because every row's fill is a pure function
+# of its (seed, vu) identity and the shared cache key fixes the seed.
 _FLUCT_CACHE: Dict[Tuple[int, int, float], Dict] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class StolenTask:
+    """One queued task exported by :meth:`Simulator.steal_queued` — the unit
+    of cross-shard work stealing (see ``core.stealing``).
+
+    Everything a destination shard needs to replay the request — and the
+    migrated VU's whole future — bit-exactly travels with the task:
+
+    * ``func``/``ev_idx``/``t_submit`` — the request itself; ``t_submit`` is
+      the *original* submission time, so its latency keeps the queueing delay
+      accrued on the victim shard plus the migration wait.
+    * ``origin_seed``/``origin_vu`` — the service-fluctuation identity of the
+      VU's *first* binding.  All of the VU's draws — this request and every
+      later one — stay ``default_rng((origin_seed, origin_vu, ev))`` no
+      matter how many times it migrates (the paper's fairness device is
+      invariant under migration).
+    * ``fluct_row`` — the draws materialized so far (destination fills any
+      gap from the identity, bit-exact either way).
+    * ``program``/``prog_funcs``/``prog_sleeps``/``next_pos`` — the closed
+      loop: the VU resumes its program on the destination at ``next_pos``.
+    * ``src_vu`` — the victim-shard-local VU id at steal time (coordinator
+      bookkeeping: maps to the global id through the admission table).
+    """
+
+    func: int
+    ev_idx: int
+    t_submit: float
+    origin_seed: int
+    origin_vu: int
+    fluct_row: List[float]
+    program: VUProgram
+    prog_funcs: List[int]
+    prog_sleeps: List[float]
+    next_pos: int
+    src_vu: int
 
 
 class Simulator:
@@ -300,6 +345,12 @@ class Simulator:
         self._failures: List[Tuple[float, int]] = []
         self._additions: List[Tuple[float, int]] = []
         self.n_events = 0  # heap events processed (bench_sim_speed)
+        # cross-shard work stealing (core.stealing) telemetry + state:
+        # _fluct_identity is None until the first foreign (stolen-in) VU
+        # arrives; then it maps row index -> (seed, vu) fluctuation identity.
+        self.stolen_out = 0
+        self.stolen_in = 0
+        self._fluct_identity: Optional[List[Tuple[int, int]]] = None
         # pre-resolved per-function metadata (hot-loop lookups)
         self._fnames = [f.name for f in self.funcs]
         self._fmem = [f.mem_mb for f in self.funcs]
@@ -351,19 +402,100 @@ class Simulator:
         if entry is None:
             if len(_FLUCT_CACHE) >= 8:
                 _FLUCT_CACHE.clear()
-            entry = _FLUCT_CACHE[key] = {"cols": 0, "rows": [[] for _ in range(n_vus)]}
+            entry = _FLUCT_CACHE[key] = {
+                "cols": 0,
+                "rows": [[] for _ in range(n_vus)],
+                "pending": set(),
+            }
         return entry
 
+    def _fluct_row_identity(self, v: int) -> Tuple[int, int]:
+        """Row index -> the (seed, vu) its draws are seeded by.
+
+        Native rows are ``(self.seed, v)``; rows received through work
+        stealing keep their origin identity (``_fluct_identity``)."""
+        ident = self._fluct_identity
+        return ident[v] if ident is not None else (self.seed, v)
+
+    @staticmethod
+    def _identity_runs(idxs) -> Iterator[Tuple[int, int, List[int]]]:
+        """Group ``(row_index, seed, vu)`` triples into maximal runs of the
+        same seed and consecutive vus, so each run fills with ONE vectorized
+        ``service_fluctuations`` call (bit-identical to per-row calls by the
+        fastrng identity contract)."""
+        run: List[int] = []
+        run_seed = run_vu0 = 0
+        for i, s, v in idxs:
+            if run and s == run_seed and v == run_vu0 + len(run):
+                run.append(i)
+                continue
+            if run:
+                yield run_seed, run_vu0, run
+            run, run_seed, run_vu0 = [i], s, v
+        if run:
+            yield run_seed, run_vu0, run
+
+    def _flush_fluct(self) -> None:
+        """Fill rows ``admit_vu`` appended lazily, batched per identity run.
+
+        Deferring the fill to first use turns the admission tier's one
+        kernel invocation *per admitted VU* into one per admission burst
+        (same doubles: entry ``[i, j]`` is a pure function of the (seed, vu,
+        ev) identity, so batched and per-VU grows are bit-identical)."""
+        entry = self._fluct
+        pending = entry["pending"]
+        if not pending:
+            return
+        cols = entry["cols"]
+        if cols:
+            rows = entry["rows"]
+            sigma = self.cfg.exec_sigma
+            triples = sorted((i, *self._fluct_row_identity(i)) for i in pending)
+            for seed, vu0, run in self._identity_runs(triples):
+                band = service_fluctuations(seed, len(run), cols, sigma, vu_start=vu0)
+                for i, extra in zip(run, band.tolist()):
+                    rows[i].extend(extra)
+        pending.clear()
+
     def _extend_fluct(self, upto: int) -> None:
-        """Grow the shared fluctuation band to cover event index ``upto``."""
+        """Grow the fluctuation band to cover event index ``upto``."""
+        self._flush_fluct()
         entry = self._fluct
         cols = entry["cols"]
         new_cols = max(upto + 1, cols * 2, 32)
         sigma = self.cfg.exec_sigma
-        band = service_fluctuations(self.seed, len(entry["rows"]), new_cols - cols, sigma, ev_start=cols)
-        for row, extra in zip(entry["rows"], band.tolist()):
-            row.extend(extra)
+        rows = entry["rows"]
+        if self._fluct_identity is None:
+            band = service_fluctuations(self.seed, len(rows), new_cols - cols, sigma, ev_start=cols)
+            for row, extra in zip(rows, band.tolist()):
+                row.extend(extra)
+        else:
+            triples = ((i, *self._fluct_identity[i]) for i in range(len(rows)))
+            for seed, vu0, run in self._identity_runs(triples):
+                band = service_fluctuations(
+                    seed, len(run), new_cols - cols, sigma, ev_start=cols, vu_start=vu0
+                )
+                for i, extra in zip(run, band.tolist()):
+                    rows[i].extend(extra)
         entry["cols"] = new_cols
+
+    def _detach_fluct(self) -> None:
+        """Give this simulator a private fluctuation table (copy-on-steal).
+
+        Cache entries are shared by (seed, n_vus, sigma); foreign rows from
+        stolen-in VUs are *not* a pure function of that key, so the first
+        ``receive_task`` detaches from the shared cache before appending.
+        With stealing off this never runs and the shared-band fast path is
+        untouched."""
+        if self._fluct_identity is not None:
+            return
+        entry = self._fluct
+        self._fluct = {
+            "cols": entry["cols"],
+            "rows": [list(r) for r in entry["rows"]],
+            "pending": set(entry["pending"]),
+        }
+        self._fluct_identity = [(self.seed, v) for v in range(len(entry["rows"]))]
 
     # --------------------------------------------------------------- run
     def run(
@@ -419,6 +551,7 @@ class Simulator:
         self._prog_sleeps = [p.sleep_s.tolist() for p in programs]
         self._vu_pos = [0] * n_vus
         self._deadline = t_start + duration_s
+        self._fluct_identity = None  # fresh run: all rows native until a steal
         self._fluct = self._fluct_entry(n_vus)
         self._overhead_s = cfg.overhead_ms / 1e3
 
@@ -548,6 +681,11 @@ class Simulator:
         identity seeding holds for admitted VUs exactly as for planned
         ones.  Requires a prior :meth:`begin`; ``t`` must not precede the
         current clock.
+
+        The row itself is appended *empty* and marked pending: the fill to
+        the band's current width happens lazily (``_flush_fluct``) at the
+        VU's first dispatch, so a burst of admissions costs one vectorized
+        kernel call instead of one per VU — with bit-identical draws.
         """
         t = self.t if t is None else float(t)
         if t < self.t:
@@ -562,14 +700,110 @@ class Simulator:
         cols = entry["cols"]
         while len(rows) <= vu:  # deterministic grow (entries may be shared)
             v = len(rows)
+            rows.append([])
             if cols:
-                band = service_fluctuations(
-                    self.seed, 1, cols, self.cfg.exec_sigma, vu_start=v
-                )
-                rows.append(band[0].tolist())
-            else:
-                rows.append([])
+                entry["pending"].add(v)
+            if self._fluct_identity is not None:
+                self._fluct_identity.append((self.seed, v))
         self._push(t, _SUBMIT, (vu,))
+        return vu
+
+    # ------------------------------------------------- cross-shard stealing
+    def steal_queued(self, n: int) -> List[StolenTask]:
+        """Export up to ``n`` tasks parked on worker pending queues (the
+        work-stealing victim hook; see :class:`StolenTask` for what travels).
+
+        Only *pending* tasks — admitted but still waiting for sandbox memory
+        — are stealable: they hold no memory, have done no work, and are
+        their closed-loop VU's single in-flight request, so exporting one
+        migrates the VU's entire future with it (the VU is retired locally;
+        no local events for it remain).  Victim order is deterministic:
+        longest pending queue first (ties by registration order), newest
+        task first.
+        Each export releases the local scheduler's connection via
+        ``on_cancel`` — the assignment never executed here.
+        """
+        out: List[StolenTask] = []
+        while len(out) < n:
+            victim = None
+            best = 0
+            for w in self.workers.values():
+                if len(w.pending) > best:
+                    best = len(w.pending)
+                    victim = w
+            if victim is None:
+                break
+            task = victim.pending.pop()
+            self.sched.on_cancel(task.worker, self._fnames[task.func])
+            vu = task.vu
+            self._flush_fluct()
+            oseed, ovu = self._fluct_row_identity(vu)
+            out.append(
+                StolenTask(
+                    func=task.func,
+                    ev_idx=task.ev_idx,
+                    t_submit=task.t_submit,
+                    origin_seed=oseed,
+                    origin_vu=ovu,
+                    fluct_row=list(self._fluct["rows"][vu]),
+                    program=self._programs[vu],
+                    prog_funcs=self._prog_funcs[vu],
+                    prog_sleeps=self._prog_sleeps[vu],
+                    next_pos=self._vu_pos[vu],
+                    src_vu=vu,
+                )
+            )
+            self._vu_pos[vu] = len(self._prog_funcs[vu])  # retire the VU here
+            self.stolen_out += 1
+        return out
+
+    def receive_task(self, stolen: StolenTask, t: Optional[float] = None) -> int:
+        """Re-inject a stolen task (the work-stealing destination hook).
+
+        Registers the migrated VU as a fresh local id — program resumed at
+        ``next_pos``, fluctuation row bound to the *origin* identity
+        ``(origin_seed, origin_vu)`` so every service draw replays bit-exactly
+        (see :class:`StolenTask`) — and dispatches the stolen request at time
+        ``t`` (default: now) with its original submission time, so recorded
+        latency keeps the victim-side queueing delay.  Completion marks the
+        record's ``migrated`` column.  Returns the new local VU id; callers
+        that merge streams extend their local->global id table with it.
+        """
+        t = self.t if t is None else float(t)
+        if t < self.t:
+            raise ValueError(f"cannot receive in the past: t={t} < now={self.t}")
+        vu = len(self._prog_funcs)
+        self._programs.append(stolen.program)
+        self._prog_funcs.append(stolen.prog_funcs)
+        self._prog_sleeps.append(stolen.prog_sleeps)
+        self._vu_pos.append(stolen.next_pos)
+        self._detach_fluct()
+        self._flush_fluct()  # fill native placeholders before the foreign row
+        entry = self._fluct
+        cols = entry["cols"]
+        row = list(stolen.fluct_row[:cols])
+        if len(row) < cols:  # origin band was narrower: fill from identity
+            band = service_fluctuations(
+                stolen.origin_seed, 1, cols - len(row), self.cfg.exec_sigma,
+                ev_start=len(row), vu_start=stolen.origin_vu,
+            )
+            row.extend(band[0].tolist())
+        # the foreign row must land at exactly index ``vu``: a band inherited
+        # from the shared cache may be wider than this run's population (rows
+        # left by earlier same-seed runs), in which case the now-private slot
+        # is repointed rather than appended past the VU's index
+        rows = entry["rows"]
+        if len(rows) == vu:
+            rows.append(row)
+            self._fluct_identity.append((stolen.origin_seed, stolen.origin_vu))
+        else:
+            rows[vu] = row
+            self._fluct_identity[vu] = (stolen.origin_seed, stolen.origin_vu)
+            entry["pending"].discard(vu)
+        task = _Task(stolen.func, vu, stolen.ev_idx, stolen.t_submit)
+        task.migrated = True
+        self._push(t, _RESUBMIT, (task,))
+        self.stolen_in += 1
         return vu
 
     # ------------------------------------------------------------ handlers
@@ -617,10 +851,13 @@ class Simulator:
             worker.busy_mem_mb += mem
             task.cold = True
             base_ms = self._fcold[func]
-        row = self._fluct["rows"][task.vu]
-        if task.ev_idx >= self._fluct["cols"]:
+        entry = self._fluct
+        row = entry["rows"][task.vu]
+        if task.ev_idx >= entry["cols"]:
             self._extend_fluct(task.ev_idx)
-            row = self._fluct["rows"][task.vu]
+            row = entry["rows"][task.vu]
+        elif entry["pending"]:
+            self._flush_fluct()  # lazily admitted rows fill in place
         task.work_s = task.remaining_s = base_ms * row[task.ev_idx] / 1e3
         worker.start(task)
         self._reschedule(worker)
@@ -671,7 +908,9 @@ class Simulator:
         worker.idle_mem_mb += mem
         self.sched.on_finish(worker.wid, self._fnames[func])
         t_done = t + self._overhead_s
-        self._rec_append(task.t_submit, t_done, func, worker.wid, task.cold, task.vu)
+        self._rec_append(
+            task.t_submit, t_done, func, worker.wid, task.cold, task.vu, task.migrated
+        )
         # closed loop: VU thinks, then submits its next request
         sleeps = self._prog_sleeps[task.vu]
         ei = task.ev_idx
@@ -730,6 +969,7 @@ class Simulator:
         # running + pending tasks are lost; control plane retries them
         for task in worker.running + worker.pending:
             fresh = _Task(task.func, task.vu, task.ev_idx, task.t_submit)
+            fresh.migrated = task.migrated  # a retried stolen task stays stolen
             self._push(self.t + self.cfg.retry_delay_s, _RESUBMIT, (fresh,))
         worker.running, worker.pending, worker.idle = [], [], {}
         worker.busy_mem_mb = worker.idle_mem_mb = 0.0

@@ -1,0 +1,134 @@
+"""Cross-shard work stealing: pull-based balancing *after* admission binds.
+
+The global admission tier (``core.admission``) applies Hiku's pull principle
+at arrival time: the least-pressured shard pulls the next VU.  That decision
+is made once — if a shard turns hot later (its VUs ramp up, its memory pool
+thrashes cold starts), the queue that builds behind it can never drain on an
+idle neighbor.  This is exactly the late-binding gap the serverless
+scheduling literature pins on static placement (Kaffes et al.'s core-granular
+migration, NOAH's job-migration view): tail latency is dominated by work
+stuck behind the wrong queue.
+
+``steal_tick`` closes the gap with the admission tier's own mechanism run in
+**both directions**: each tick, one pressure-keyed heap of *victims* (shards
+above ``steal_watermark``) and one of *thieves* (shards below the pull
+watermark).  While both heaps are non-empty, the most-pressured victim
+exports one queued task (``Simulator.steal_queued``) and the least-pressured
+thief re-injects it (``Simulator.receive_task``); each move adjusts both
+shards' effective pressure by ``1/n_workers`` — the same accounting the
+admission tier applies per pull — so a single tick cannot flood a thief or
+drain a victim past the watermarks.
+
+Contracts (stated normatively in docs/ARCHITECTURE.md §8):
+
+* only *pending* tasks migrate (admitted, waiting for sandbox memory: no
+  work done, no memory held) and the closed-loop VU migrates with its task;
+* the migrated VU's service-fluctuation identity ``(origin_seed, origin_vu)``
+  travels with it, so every replayed draw is bit-exact under migration;
+* a dead shard (all workers failed, pressure ``inf``) can never be a thief,
+  and has nothing stealable as a victim;
+* with stealing off nothing here runs: the static partition and the pull
+  tier stay byte/stream-identical to their pre-stealing behavior.
+
+Determinism: heap order is a total order ``(pressure, shard index)``, victim
+selection inside a shard is deterministic (``steal_queued``), so a steal
+schedule is a pure function of the co-run state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional, Sequence
+
+from .simulator import Simulator, StolenTask
+
+__all__ = ["Migration", "steal_tick"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Migration:
+    """One completed task migration (telemetry row on ``AdmissionRun``).
+
+    ``src_vu``/``dst_vu`` are shard-local VU ids (the victim's id at steal
+    time and the fresh id the destination registered); the admission tier
+    resolves ``src_vu`` through its admission table to a global VU id.
+    """
+
+    t: float
+    src: int
+    dst: int
+    src_vu: int
+    dst_vu: int
+    func: int
+    ev_idx: int
+
+
+def steal_tick(
+    sims: Sequence[Simulator],
+    steal_watermark: float,
+    pull_watermark: float,
+    inv_workers: Sequence[float],
+    t: Optional[float] = None,
+    max_moves: Optional[int] = None,
+) -> List[Migration]:
+    """One stealing round over co-run shards; returns the moves it made.
+
+    Args:
+        sims: the K shard simulators (co-run via ``begin``/``step_until``).
+        steal_watermark: pressure above which a shard is a victim; must sit
+            at or above ``pull_watermark`` or a shard could be both sides of
+            the same move.
+        pull_watermark: pressure below which a shard may receive (the
+            admission tier's pull watermark — stealing is admission's
+            mirror image).
+        inv_workers: per-shard ``1 / n_workers`` pressure increments.
+        t: simulated re-injection time (default: each receiver's clock).
+        max_moves: optional hard cap on migrations this tick.
+
+    The two heaps are rebuilt from live ``Simulator.pressure()`` each tick;
+    within the tick, moves adjust effective pressures exactly like admission
+    pulls do, so staleness is bounded by the tick period either way.
+    """
+    if steal_watermark < pull_watermark:
+        raise ValueError(
+            f"steal_watermark {steal_watermark} must be >= pull watermark "
+            f"{pull_watermark} (a shard must never be victim and thief at once)"
+        )
+    pressures = [sim.pressure() for sim in sims]
+    # max-heap of victims, min-heap of thieves — the same pressure-keyed
+    # heap the admission tier runs, here in both directions at once.
+    victims = [(-p, k) for k, p in enumerate(pressures) if p > steal_watermark]
+    thieves = [(p, k) for k, p in enumerate(pressures) if p < pull_watermark]
+    heapq.heapify(victims)
+    heapq.heapify(thieves)
+    moves: List[Migration] = []
+    while victims and thieves and (max_moves is None or len(moves) < max_moves):
+        neg_pv, v = victims[0]
+        pt, th = thieves[0]
+        if -neg_pv <= steal_watermark or pt >= pull_watermark:
+            break  # both frontiers inside the watermark band: balanced enough
+        got = sims[v].steal_queued(1)
+        if not got:
+            heapq.heappop(victims)  # pressured but nothing queued is stealable
+            continue
+        stolen: StolenTask = got[0]
+        # never before the receiver's clock: unevenly stepped sims would
+        # otherwise reject the receive AFTER the victim was already mutated,
+        # losing the task (exactly-once would break)
+        when = sims[th].t if t is None else max(t, sims[th].t)
+        dst_vu = sims[th].receive_task(stolen, t=when)
+        moves.append(
+            Migration(
+                t=when,
+                src=v,
+                dst=th,
+                src_vu=stolen.src_vu,
+                dst_vu=dst_vu,
+                func=stolen.func,
+                ev_idx=stolen.ev_idx,
+            )
+        )
+        heapq.heapreplace(victims, (neg_pv + inv_workers[v], v))
+        heapq.heapreplace(thieves, (pt + inv_workers[th], th))
+    return moves

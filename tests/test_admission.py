@@ -95,7 +95,8 @@ def test_watermark_throttles_admission():
         admission=AdmissionConfig(watermark=0.26, batch_size=1),
     )
     programs = make_skewed_programs(adm_tight.funcs, 24, 64, 1, hot_frac=1.0)
-    r = adm_tight.run(24, 10.0, programs=programs)
+    with pytest.warns(RuntimeWarning, match="never admitted"):
+        r = adm_tight.run(24, 10.0, programs=programs)
     assert r.admitted < 24  # queue never fully drained
     assert r.unadmitted == 24 - r.admitted
     assert int(r.queue_depth.max(initial=0)) > 0
@@ -105,7 +106,8 @@ def test_arrival_times_gate_eligibility():
     adm = AdmissionSimulator(2, 8, scheduler="hiku", seed=2)
     programs = make_skewed_programs(adm.funcs, 12, 64, 2)
     arrivals = [0.0] * 6 + [5.0] * 3 + [100.0] * 3  # last 3 after the deadline
-    r = adm.run(12, 10.0, programs=programs, arrivals=arrivals)
+    with pytest.warns(RuntimeWarning, match="never admitted"):
+        r = adm.run(12, 10.0, programs=programs, arrivals=arrivals)
     assert r.admitted == 9 and r.unadmitted == 3
     admit_times = {
         int(g): float(t)
@@ -123,7 +125,8 @@ def test_arrivals_in_final_partial_tick_window_stay_unadmitted():
     AdmissionSimulator.run)."""
     adm = AdmissionSimulator(2, 8, scheduler="hiku", seed=2)  # tick_s=0.25
     programs = make_skewed_programs(adm.funcs, 4, 64, 2)
-    r = adm.run(4, 10.0, programs=programs, arrivals=[0.0, 0.0, 9.8, 9.9])
+    with pytest.warns(RuntimeWarning, match="never admitted"):
+        r = adm.run(4, 10.0, programs=programs, arrivals=[0.0, 0.0, 9.8, 9.9])
     assert r.admitted == 2 and r.unadmitted == 2
     admitted_gids = sorted(g for s in r.shards for g in s.admitted.tolist())
     assert admitted_gids == [0, 1]

@@ -72,6 +72,23 @@ def test_concat_take_remap_getitem(sim_run):
     assert list(cols[:2]) == recs[:2]
 
 
+def test_from_structured_defaults_only_migrated(sim_run):
+    """Pre-work-stealing captures (no ``migrated`` field) load with the
+    column defaulted; any other missing field is corruption and raises."""
+    sim, _ = sim_run
+    cols = sim.record_columns
+    legacy_dtype = np.dtype([d for d in REC_DTYPE.descr if d[0] != "migrated"])
+    legacy = np.empty(len(cols), legacy_dtype)
+    for name in legacy_dtype.names:
+        legacy[name] = getattr(cols, name)
+    back = RecordColumns.from_structured(legacy)
+    assert back.equals(cols)  # migrated was all-False in this run
+    assert not back.migrated.any()
+    truncated = np.empty(3, np.dtype([("t_submit", "<f8"), ("t_done", "<f8")]))
+    with pytest.raises(ValueError, match="lacks fields"):
+        RecordColumns.from_structured(truncated)
+
+
 def test_empty_store():
     empty = RecordColumns.empty()
     assert len(empty) == 0 and empty.to_records() == []

@@ -124,18 +124,40 @@ def test_failure_injection_routes_to_owning_shard():
 def test_rejoin_after_failure_stays_in_shard_span():
     driver = ShardedSimulator(2, 10, scheduler="hiku", seed=6, backend="serial")
     driver.inject_failure(4.0, 7)
-    driver.inject_worker(8.0, 2, shard=1)  # re-join of failed local worker 2
+    driver.inject_worker(8.0, 7)  # re-join of failed global worker 7
     specs = driver.plan(n_vus=12, duration_s=25.0)
     assert specs[1].failures == ((4.0, 2),) and specs[1].additions == ((8.0, 2),)
     merged = driver.run(n_vus=12, duration_s=25.0)
     late = merged.records[merged.records.t_submit > 12.0]
     assert len(late) and 7 in set(late.worker.tolist())  # global id 7 is back
-    # additions beyond the shard's static span would collide with the next
+    # additions beyond the static partition would collide with another
     # shard's global id range after the merge remap: rejected up front
     with pytest.raises(ValueError):
-        driver.inject_worker(8.0, 5, shard=0)
-    with pytest.raises(ValueError):
-        driver.inject_worker(8.0, 2, shard=2)
+        driver.inject_worker(8.0, 10)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            driver.inject_worker(8.0, 5, shard=0)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            driver.inject_worker(8.0, 2, shard=2)
+
+
+def test_inject_worker_global_and_legacy_forms_map_identically():
+    """Both injection hooks take global ids; the deprecated shard= form maps
+    onto the same (shard, local) pair and warns."""
+    unified = ShardedSimulator(2, 10, scheduler="hiku", seed=6, backend="serial")
+    unified.inject_failure(4.0, 7)  # global 7 -> shard 1, local 2
+    unified.inject_worker(8.0, 7)  # same id, same mapping, no shard= needed
+    legacy = ShardedSimulator(2, 10, scheduler="hiku", seed=6, backend="serial")
+    legacy.inject_failure(4.0, 7)
+    with pytest.warns(DeprecationWarning, match="global worker id"):
+        legacy.inject_worker(8.0, 2, shard=1)
+    su, sl = unified.plan(12, 25.0), legacy.plan(12, 25.0)
+    assert su == sl
+    assert su[1].failures == ((4.0, 2),) and su[1].additions == ((8.0, 2),)
+    # ... and the runs they drive are identical streams
+    ru, rl = unified.run(12, 25.0), legacy.run(12, 25.0)
+    assert ru.records.equals(rl.records)
 
 
 def test_shard_of_worker_bounds():

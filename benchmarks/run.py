@@ -36,6 +36,7 @@ def main(argv=None) -> None:
         bench_kernels,
         bench_latency,
         bench_overhead,
+        bench_policies,
         bench_pull_dispatch,
         bench_shard_scale,
         bench_sim_speed,
@@ -64,6 +65,7 @@ def main(argv=None) -> None:
         "shard_scale": bench_shard_scale,
         "admission": bench_admission,
         "stealing": bench_stealing,
+        "policies": bench_policies,
     }
     if args.only:
         keep = set(args.only.split(","))

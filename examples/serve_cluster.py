@@ -6,9 +6,11 @@ scheduler — through the cluster simulator, scales the same protocol out
 across K independent cluster shards via the sharded multi-cluster driver,
 demonstrates the global pull-based admission tier balancing a skewed VU
 population the static partition can't (with windowed metrics streaming off
-the in-flight merge), then serves a *real* small model with batched
-requests through the engine under the same scheduler, including a worker
-failure + elastic re-join mid-run.
+the in-flight merge), compares admission policies from the pluggable
+registry on a flash-crowd scenario (`pull` vs `deadline`, side by side),
+then serves a *real* small model with batched requests through the engine
+under the same scheduler, including a worker failure + elastic re-join
+mid-run.
 
     PYTHONPATH=src python examples/serve_cluster.py [--quick] [--shards K]
 """
@@ -151,6 +153,39 @@ def work_stealing(quick: bool, n_shards: int):
               f"{extra}")
 
 
+def policy_comparison(quick: bool, n_shards: int):
+    """Same flash-crowd scenario under `pull` vs `deadline` admission,
+    printed side by side (covered by the docs smoke marker in
+    tests/test_docs.py)."""
+    import warnings
+
+    from repro.core import available_policies, make_scenario
+    from repro.core.admission import AdmissionConfig, AdmissionSimulator
+
+    n_workers, n_vus, dur = (8, 32, 14.0) if quick else (32, 96, 40.0)
+    n_shards = min(n_shards, n_workers)
+    print(f"\n== admission-policy registry: {available_policies()} ==")
+    print(f"   flash crowd: {n_shards} shards, {n_workers} workers, {n_vus} VUs "
+          f"(60% spike, half on 2s first-response SLOs), {dur:.0f}s")
+    cfg = SimConfig(mem_pool_mb=1024.0)
+    scn = make_scenario("flash_crowd", make_functions(seed=0), n_vus, dur, seed=0)
+    print(f"   {'policy':<10}{'p99 ms':>8}{'miss':>7}{'cold':>7}{'CV':>7}"
+          f"{'admitted':>10}{'requests':>10}")
+    for policy in ("pull", "deadline"):
+        adm = AdmissionSimulator(n_shards, n_workers, scheduler="hiku",
+                                 cfg=cfg, seed=0,
+                                 admission=AdmissionConfig(policy=policy))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            r = adm.run(scn.n_vus, dur, **scn.run_kwargs())
+        m = r.summarize(dur)
+        print(f"   {policy:<10}{m.p99_ms:>8.0f}{m.deadline_miss_rate:>7.2f}"
+              f"{m.cold_rate:>7.1%}{r.shard_load_cv:>7.2f}{r.admitted:>10d}"
+              f"{m.n_requests:>10d}")
+    print("   (deadline = EDF-ordered global queue: tight-SLO VUs admitted "
+          "ahead of the backlog; see docs/POLICIES.md)")
+
+
 def serve_real_batched(quick: bool):
     print("\n== real-model serving with batched requests + failure/elastic ==")
     cfg = get_config("minicpm_2b").reduced()
@@ -186,4 +221,5 @@ if __name__ == "__main__":
     sharded_scale_out(args.quick, args.shards)
     admission_tier(args.quick, args.shards)
     work_stealing(args.quick, args.shards)
+    policy_comparison(args.quick, args.shards)
     serve_real_batched(args.quick)

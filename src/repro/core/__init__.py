@@ -16,8 +16,12 @@ end-to-end tour; each symbol's docstring states which contracts bind it):
   ``MergedRun``/``StreamChunk``/``shard_seed`` (static K-shard partition +
   batch/streaming merge), ``AdmissionSimulator``/``AdmissionConfig``/
   ``AdmissionRun`` (global pull-based admission tier),
-  ``StolenTask``/``Migration``/``steal_tick`` (cross-shard work stealing
-  over the admission co-run);
+  ``AdmissionPolicy``/``ShardState``/``register_policy``/
+  ``unregister_policy``/``available_policies``/``make_policy`` (pluggable
+  admission-policy registry; see docs/POLICIES.md for the author
+  contract), ``Scenario``/``make_scenario``/``available_scenarios``
+  (bursty workload suite), ``StolenTask``/``Migration``/``steal_tick``
+  (cross-shard work stealing over the admission co-run);
 * JAX form — ``JIQState``/``init_state``/``sched_step``/``sched_many``/
   ``sched_many_fused`` + the ``ARRIVAL``/``FINISH``/``EVICT`` event kinds
   (vectorized Algorithm 1, Pallas-fused on TPU).
@@ -50,6 +54,14 @@ from .metrics import (
     summarize_window,
     summarize_windows,
 )
+from .policies import (
+    AdmissionPolicy,
+    ShardState,
+    available_policies,
+    make_policy,
+    register_policy,
+    unregister_policy,
+)
 from .records import RecordAccumulator, RecordColumns, RequestRecord
 from .scheduler import Scheduler, available_schedulers, make_scheduler
 from .shard import (
@@ -63,10 +75,12 @@ from .shard import (
 from .simulator import SimConfig, Simulator, StolenTask
 from .stealing import Migration, steal_tick
 from .trace import FunctionSpec, default_n_events, make_functions, make_vu_programs
+from .workloads import Scenario, available_scenarios, make_scenario
 
 __all__ = [
     "ARRIVAL",
     "AdmissionConfig",
+    "AdmissionPolicy",
     "AdmissionRun",
     "AdmissionShard",
     "AdmissionSimulator",
@@ -81,22 +95,29 @@ __all__ = [
     "RecordColumns",
     "RequestRecord",
     "RunMetrics",
+    "Scenario",
     "Scheduler",
     "ShardResult",
     "ShardSpec",
+    "ShardState",
     "ShardedSimulator",
     "SimConfig",
     "Simulator",
     "StolenTask",
     "StreamChunk",
+    "available_policies",
+    "available_scenarios",
     "available_schedulers",
     "init_state",
     "latency_cdf",
     "load_cv_per_second",
     "default_n_events",
     "make_functions",
+    "make_policy",
+    "make_scenario",
     "make_scheduler",
     "make_vu_programs",
+    "register_policy",
     "sched_many",
     "sched_many_fused",
     "sched_step",
@@ -105,4 +126,5 @@ __all__ = [
     "summarize",
     "summarize_window",
     "summarize_windows",
+    "unregister_policy",
 ]

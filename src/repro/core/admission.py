@@ -36,6 +36,17 @@ pressure-keyed heap run in both directions.  Migrations carry the VU's
 bit-exact service identity and are recorded in the ``migrated`` record
 column and the run's ``migrations`` telemetry.
 
+*Which* shard pulls, *when* it may, and *which* queued VU it receives are
+policy decisions, dispatched through the pluggable registry in
+``core.policies``: ``AdmissionConfig.policy`` names any registered
+``AdmissionPolicy`` (``available_policies()`` lists them — ``pull``,
+``round_robin``, ``pull+steal``, ``deadline``, ``cost``, ``predictive``
+ship built in), and the three original behaviors run byte-identically
+through the same dispatch.  ``core.workloads`` generates the bursty
+scenario suite (flash crowds, diurnal load, ON/OFF arrivals, heavy-tailed
+service mixes) the policies are benchmarked on
+(``benchmarks/bench_policies.py``).
+
 The static partition (``ShardedSimulator``) remains the default and is
 byte-identical to the frozen seed engine; the admission tier is a new
 opt-in scenario with its own (still deterministic, still seeded) streams.
@@ -48,15 +59,14 @@ populations the static partition cannot balance, and
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
 import warnings
-from collections import deque
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .metrics import RunMetrics, summarize
+from .policies import PolicyContext, get_policy_class, make_policy
 from .records import RecordColumns
 from .scheduler import make_scheduler
 from .shard import merge_assignments, merge_window, shard_seed, split_even
@@ -97,18 +107,27 @@ class AdmissionConfig:
         batch_size: optional hard cap on VUs bound per shard per tick,
             honored by every policy (None: ``pull`` is watermark-limited
             only; ``round_robin`` drains the eligible queue each tick).
-        policy: ``"pull"`` (pressure-ordered admission), ``"pull+steal"``
-            (pull admission plus per-tick cross-shard work stealing — see
-            ``core.stealing``) or ``"round_robin"`` (bind each arrival to
-            the next shard in cyclic order immediately — the
-            arrival-capable static baseline).
+        policy: name of a registered admission policy
+            (``core.policies.available_policies()``).  Built in: ``"pull"``
+            (pressure-ordered watermark admission), ``"pull+steal"`` (pull
+            plus per-tick cross-shard work stealing — see ``core.stealing``),
+            ``"round_robin"`` (cyclic binding on arrival — the
+            arrival-capable static baseline), ``"deadline"`` (EDF-ordered
+            global queue), ``"cost"`` (warm-capacity-scaled pull threshold)
+            and ``"predictive"`` (EWMA arrival-forecast-modulated
+            watermark).  Unknown names raise at config construction with
+            the available list.
         steal_watermark: pressure above which a shard's queued tasks may be
-            stolen (``pull+steal`` only).  Must be >= ``watermark`` so a
+            stolen (stealing policies only).  Must be >= ``watermark`` so a
             shard can never be victim and thief in the same tick; the band
             between the two watermarks is the hysteresis that keeps
             near-balanced shards from churning migrations.
         steal_batch: optional hard cap on migrations per tick
-            (``pull+steal`` only; None: the two heaps limit the tick).
+            (stealing policies only; None: the two heaps limit the tick).
+        policy_args: optional policy-specific knobs, passed as keyword
+            arguments to the policy constructor (e.g. ``{"cost_weight":
+            0.8}`` for ``cost``, ``{"alpha": 0.5, "gain": 2.0}`` for
+            ``predictive``).
     """
 
     watermark: float = 0.75
@@ -117,6 +136,24 @@ class AdmissionConfig:
     policy: str = "pull"
     steal_watermark: float = 1.5
     steal_batch: Optional[int] = None
+    policy_args: Optional[Mapping[str, object]] = None
+
+    def __post_init__(self):
+        cls = get_policy_class(self.policy)  # unknown name -> available list
+        if self.tick_s <= 0:
+            raise ValueError("tick_s must be > 0")
+        if self.batch_size is not None and self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1 (or None for uncapped)")
+        if cls.steals:
+            if self.steal_watermark < self.watermark:
+                raise ValueError(
+                    "steal_watermark must be >= watermark (a shard must never "
+                    "be steal victim and pull thief at once)"
+                )
+            if self.steal_batch is not None and self.steal_batch < 1:
+                raise ValueError("steal_batch must be >= 1 (or None for uncapped)")
+        # surface bad policy knobs at config time, not mid-run
+        cls(self, **dict(self.policy_args or {}))
 
 
 @dataclasses.dataclass
@@ -158,6 +195,12 @@ class AdmissionRun:
     queue_t: np.ndarray  # admission-queue depth telemetry: sample times (s)
     queue_depth: np.ndarray  # eligible-but-unadmitted VUs at each sample
     migrations: List[Migration] = dataclasses.field(default_factory=list)
+    #: per-global-VU relative latency deadline (ms; None when the workload
+    #: carries no deadline metadata) — feeds RunMetrics.deadline_miss_rate
+    deadline_ms: Optional[np.ndarray] = None
+    #: per-global-VU arrival times (s) — the miss clock starts here, so
+    #: admission-queue wait is charged against the deadline
+    arrival_s: Optional[np.ndarray] = None
 
     @property
     def n_migrations(self) -> int:
@@ -176,7 +219,8 @@ class AdmissionRun:
 
     def summarize(self, duration_s: float) -> RunMetrics:
         return summarize(
-            self.records, (self.assign_t, self.assign_w), self.workers, duration_s
+            self.records, (self.assign_t, self.assign_w), self.workers, duration_s,
+            deadline_ms=self.deadline_ms, arrival_s=self.arrival_s,
         )
 
 
@@ -309,20 +353,10 @@ class AdmissionSimulator:
         self.cfg = cfg or SimConfig()
         self.seed = int(seed)
         self.admission = admission or AdmissionConfig()
-        if self.admission.policy not in ("pull", "pull+steal", "round_robin"):
-            raise ValueError(f"unknown admission policy {self.admission.policy!r}")
-        if self.admission.tick_s <= 0:
-            raise ValueError("tick_s must be > 0")
-        if self.admission.batch_size is not None and self.admission.batch_size < 1:
-            raise ValueError("batch_size must be >= 1 (or None for uncapped)")
-        if self.admission.policy == "pull+steal":
-            if self.admission.steal_watermark < self.admission.watermark:
-                raise ValueError(
-                    "steal_watermark must be >= watermark (a shard must never "
-                    "be steal victim and pull thief at once)"
-                )
-            if self.admission.steal_batch is not None and self.admission.steal_batch < 1:
-                raise ValueError("steal_batch must be >= 1 (or None for uncapped)")
+        # config values are validated by AdmissionConfig.__post_init__;
+        # re-resolve the policy here so a name unregistered since the config
+        # was built still fails fast, with the live available list
+        self._policy_cls = get_policy_class(self.admission.policy)
         self.worker_split = split_even(self.n_workers, self.n_shards)
         self.worker_offsets = [0]
         for n in self.worker_split:
@@ -338,6 +372,7 @@ class AdmissionSimulator:
         duration_s: float = 100.0,
         programs: Optional[Sequence[VUProgram]] = None,
         arrivals: Optional[Sequence[float]] = None,
+        deadlines: Optional[Sequence[float]] = None,
     ) -> AdmissionRun:
         """Co-run the K shards under the global admission queue.
 
@@ -355,17 +390,31 @@ class AdmissionSimulator:
                 particular any at or after ``duration_s``) are never
                 admitted and count as unadmitted.  Shrink ``tick_s`` to
                 shrink that end-of-run blind window.
+            deadlines: per-VU *relative* latency deadlines, seconds
+                (default: none; ``inf`` = that VU carries no SLO).
+                Deadline-aware policies order the global queue by
+                ``arrival + deadline`` (EDF), and
+                ``AdmissionRun.summarize`` scores
+                ``RunMetrics.deadline_miss_rate`` — the fraction of
+                SLO-carrying VUs whose *first completion* landed after
+                ``arrival + deadline`` (admission-queue wait is charged;
+                a VU that never completes counts as missed; later
+                requests are not scored).  Scenario generators in
+                ``core.workloads`` produce these.
 
         Any VU still unadmitted at the deadline is reported on
         ``AdmissionRun.unadmitted`` and raises a ``RuntimeWarning`` — a
         silently shrunken population is a bug magnet in benchmarks.
 
         Deterministic for fixed inputs: the admission loop advances
-        simulated time in ``tick_s`` slices, and pull order is a total
-        order (pressure, shard index); under ``pull+steal`` the steal
-        schedule is equally a total order (see ``core.stealing``).
+        simulated time in ``tick_s`` slices, every registered policy's
+        decisions are a pure function of the visible state (the
+        ``core.policies`` determinism contract), and under stealing
+        policies the steal schedule is equally a total order (see
+        ``core.stealing``).
         """
         adm = self.admission
+        policy = make_policy(adm.policy, adm, **dict(adm.policy_args or {}))
         if programs is None:
             programs = make_vu_programs(
                 self.funcs, n_vus, default_n_events(duration_s), self.seed
@@ -379,6 +428,12 @@ class AdmissionSimulator:
             arr = np.asarray(arrivals, np.float64)
             if arr.shape != (n_vus,):
                 raise ValueError(f"arrivals shape {arr.shape} != ({n_vus},)")
+        if deadlines is None:
+            dl = None
+        else:
+            dl = np.asarray(deadlines, np.float64)
+            if dl.shape != (n_vus,):
+                raise ValueError(f"deadlines shape {dl.shape} != ({n_vus},)")
         order = np.argsort(arr, kind="stable")  # admission-queue order
 
         sims: List[Simulator] = []
@@ -398,39 +453,34 @@ class AdmissionSimulator:
         admit_t: List[List[float]] = [[] for _ in range(self.n_shards)]
         pulls = [0] * self.n_shards
         migrations: List[Migration] = []
-        waiting: deque = deque()
+        ctx = PolicyContext(
+            sims=sims,
+            programs=programs,
+            worker_split=self.worker_split,
+            inv_workers=self.inv_workers,
+            admitted=admitted,
+            admit_t=admit_t,
+            pulls=pulls,
+            policy=policy,
+            arrivals=arr,
+            deadlines=dl,
+        )
         qpos = 0
-        rr_next = 0  # round_robin cursor
         queue_t: List[float] = []
         queue_depth: List[int] = []
         tick = 0
         t = 0.0
         t0 = time.perf_counter()
         while True:
+            n_new = 0
             while qpos < n_vus and arr[order[qpos]] <= t:
-                waiting.append(int(order[qpos]))
+                ctx.enqueue(int(order[qpos]))
                 qpos += 1
-            if t < duration_s and waiting:
-                if adm.policy == "round_robin":
-                    # consecutive cyclic slots, so a quota of batch_size * K
-                    # gives every shard at most batch_size this tick
-                    quota = (
-                        n_vus if adm.batch_size is None
-                        else adm.batch_size * self.n_shards
-                    )
-                    while waiting and quota > 0:
-                        quota -= 1
-                        gid = waiting.popleft()
-                        k = rr_next % self.n_shards
-                        rr_next += 1
-                        local = sims[k].admit_vu(programs[gid], t=t)
-                        assert local == len(admitted[k])
-                        admitted[k].append(gid)
-                        admit_t[k].append(t)
-                        pulls[k] += 1
-                else:
-                    self._pull_tick(t, sims, programs, waiting, admitted, admit_t, pulls)
-            if adm.policy == "pull+steal" and t < duration_s:
+                n_new += 1
+            policy.observe(t, n_new, ctx)
+            if t < duration_s and ctx.waiting_n:
+                policy.admit_tick(t, ctx)
+            if policy.steals and t < duration_s:
                 # post-admission rebalance: the pull heap run in reverse too
                 moves = steal_tick(
                     sims,
@@ -447,7 +497,7 @@ class AdmissionSimulator:
                     admit_t[mv.dst].append(t)
                 migrations.extend(moves)
             queue_t.append(t)
-            queue_depth.append(len(waiting))
+            queue_depth.append(ctx.waiting_n)
             if t >= duration_s and all(s.done for s in sims):
                 break
             tick += 1
@@ -457,39 +507,34 @@ class AdmissionSimulator:
         wall_s = time.perf_counter() - t0
         return self._merge(
             sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
-            migrations,
+            migrations, dl, arr,
         )
 
     def _pull_tick(self, t, sims, programs, waiting, admitted, admit_t, pulls) -> None:
-        """One admission round: shards pull from the queue, least pressure
-        first, until every shard sits at its watermark (or the queue/batch
-        cap empties).  The shard heap is the cluster-level ``PQ_f``."""
-        adm = self.admission
-        inv_w = self.inv_workers
-        tick_pulls = [0] * self.n_shards
-        heap = [(sims[k].pressure(), k) for k in range(self.n_shards)]
-        heapq.heapify(heap)
-        while waiting and heap:
-            p, k = heap[0]
-            if p >= adm.watermark:
-                break  # least-loaded shard is already at the watermark
-            gid = waiting.popleft()
-            local = sims[k].admit_vu(programs[gid], t=t)
-            assert local == len(admitted[k])
-            admitted[k].append(gid)
-            admit_t[k].append(t)
-            pulls[k] += 1
-            tick_pulls[k] += 1
-            if adm.batch_size is not None and tick_pulls[k] >= adm.batch_size:
-                heapq.heappop(heap)  # shard done for this tick
-            else:
-                # the admitted VU is not visible to pressure() until the
-                # event loop catches up; account for it explicitly
-                heapq.heapreplace(heap, (p + inv_w[k], k))
+        """One watermark-pull admission round over an externally supplied
+        FIFO queue (``collections.deque`` of global VU ids).
+
+        Legacy direct-drive entry point, kept for tests and ad-hoc drivers;
+        the run loop itself dispatches through ``core.policies`` — this shim
+        runs the registry's ``pull`` policy for a single tick, which is the
+        original pressure-heap round byte-for-byte."""
+        policy = make_policy("pull", self.admission)
+        ctx = PolicyContext(
+            sims=sims,
+            programs=programs,
+            worker_split=self.worker_split,
+            inv_workers=self.inv_workers,
+            admitted=admitted,
+            admit_t=admit_t,
+            pulls=pulls,
+            policy=policy,
+        )
+        ctx.waiting = waiting  # adopt the caller's queue in place
+        policy.admit_tick(t, ctx)
 
     def _merge(
         self, sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
-        migrations,
+        migrations, deadlines=None, arrivals=None,
     ) -> AdmissionRun:
         shards: List[AdmissionShard] = []
         parts: List[RecordColumns] = []
@@ -547,4 +592,6 @@ class AdmissionSimulator:
             queue_t=np.asarray(queue_t),
             queue_depth=np.asarray(queue_depth, np.int64),
             migrations=list(migrations),
+            deadline_ms=None if deadlines is None else deadlines * 1e3,
+            arrival_s=arrivals,
         )

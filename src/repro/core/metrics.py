@@ -12,7 +12,7 @@ loops performed (tests/test_records.py pins the parity at tolerance 0).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -32,7 +32,13 @@ class RunMetrics:
     duration; ``load_cv`` is the mean per-second coefficient of variation
     of assignments across workers (Figure 14); ``migrated_rate`` is the
     fraction of requests completed on a shard other than their binding one
-    (cross-shard work stealing; 0.0 whenever stealing is off).  Dataclass
+    (cross-shard work stealing; 0.0 whenever stealing is off);
+    ``deadline_miss_rate`` is the fraction of deadline-carrying VUs whose
+    *first completion* landed after ``arrival + deadline`` — time to first
+    response, the flash-crowd SLO: it charges admission-queue wait as well
+    as in-cluster latency, and a VU that never completed at all counts as
+    missed (0.0 when the workload carries no deadline metadata — see
+    ``summarize(deadline_ms=...)``).  Dataclass
     equality is exact float equality — the windowed-metrics parity tests
     rely on that."""
 
@@ -46,6 +52,7 @@ class RunMetrics:
     throughput_rps: float
     load_cv: float  # avg coefficient of variation of assignments/worker/second
     migrated_rate: float = 0.0
+    deadline_miss_rate: float = 0.0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -127,6 +134,8 @@ def summarize(
     assignments: AssignmentsLike,
     workers: Sequence[int],
     duration_s: float,
+    deadline_ms: Optional[np.ndarray] = None,
+    arrival_s: Optional[np.ndarray] = None,
 ) -> RunMetrics:
     """Aggregate §V metrics over a full record stream, in one vectorized pass.
 
@@ -137,6 +146,16 @@ def summarize(
         workers: global worker ids participating in the run (the CV
             denominator — include idle workers).
         duration_s: experiment length, seconds (throughput denominator).
+        deadline_ms: optional per-VU relative latency deadline (ms), one
+            entry per VU of the *population* (``inf`` = no deadline on
+            that VU).  When given, ``deadline_miss_rate`` is the fraction
+            of deadline-carrying VUs whose first completion exceeded
+            ``arrival + deadline`` — time to first response, charging any
+            admission-queue wait; a VU with no completions at all counts
+            as missed.  Omitted: 0.0.
+        arrival_s: per-VU arrival times (seconds), parallel to
+            ``deadline_ms``; default: everyone at t=0 (the plain-engine
+            convention where VU streams start with the run).
 
     Adapter-equivalence contract: row and columnar inputs produce
     float-for-float identical results (tests/test_records.py, tolerance 0).
@@ -147,6 +166,22 @@ def summarize(
     cold = cols.cold if n else np.zeros(1)
     migrated = cols.migrated if n else np.zeros(1)
     cv = load_cv_per_second(assignments, workers, duration_s)
+    miss_rate = 0.0
+    if deadline_ms is not None:
+        dl = np.asarray(deadline_ms, np.float64)
+        n_pop = dl.shape[0]
+        arr_ms = (
+            np.zeros(n_pop)
+            if arrival_s is None
+            else np.asarray(arrival_s, np.float64) * 1e3
+        )
+        first_done = np.full(n_pop, np.inf)
+        if n:
+            np.minimum.at(first_done, cols.vu, cols.t_done * 1e3)
+        has_dl = np.isfinite(dl)
+        if has_dl.any():
+            miss = first_done[has_dl] - arr_ms[has_dl] > dl[has_dl]
+            miss_rate = float(miss.mean())
     return RunMetrics(
         n_requests=n,
         mean_latency_ms=float(lat.mean()),
@@ -158,6 +193,7 @@ def summarize(
         throughput_rps=n / max(duration_s, 1e-9),
         load_cv=float(cv.mean()) if cv.size else 0.0,
         migrated_rate=float(migrated.mean()),
+        deadline_miss_rate=miss_rate,
     )
 
 

@@ -1,0 +1,515 @@
+"""Pluggable admission-policy registry: "add a policy" as a registry entry.
+
+The global admission tier (``core.admission``) started life with one
+hard-wired behavior — watermark pull — and two literals bolted beside it
+(``round_robin``, ``pull+steal``).  This module turns the policy choice into
+a first-class extension point:
+
+* :class:`AdmissionPolicy` is the author-facing protocol: a policy sees the
+  co-run only through :class:`ShardState` snapshots and the
+  :class:`PolicyContext` mediator, and decides **which shard pulls next**
+  (``rank_shards``), **whether a shard may pull right now** (``want_pull``),
+  and — optionally — **which queued VU is admitted first**
+  (``orders_queue`` + ``queue_key``).
+* :func:`register_policy` / :func:`unregister_policy` /
+  :func:`available_policies` / :func:`make_policy` are the registry.
+  ``AdmissionConfig`` validates its ``policy`` field against it, so a typo
+  fails at config construction with the available list in the message.
+
+The three pre-registry behaviors are ported onto the protocol **byte
+identically** (``pull``, ``round_robin``, ``pull+steal`` — the admission and
+stealing suites pass unmodified), and three new policies ship against it:
+
+* ``deadline`` — EDF: the global queue is ordered by absolute deadline
+  (arrival + per-VU relative deadline from the workload metadata), so during
+  a backlog the most urgent VUs are admitted first, while shard selection
+  stays pressure-ordered.  Kaffes et al. (*Practical Scheduling for
+  Real-World Serverless Computing*) motivate deadline-awareness under
+  realistic arrival mixes; ``RunMetrics.deadline_miss_rate`` scores it.
+* ``cost`` — cold-start-cost-aware pull: each shard's pressure is inflated
+  by its *lack* of warm capacity (``Simulator.warm_capacity``), so shards
+  whose sandbox pools are pinned by running work — the ones that would
+  cold-start or queue a new VU — pull less, and warm shards soak up
+  arrivals first.
+* ``predictive`` — a cheap MPC-flavored baseline (Nguyen et al., *Taming
+  Cold Starts with Model Predictive Control*): an EWMA forecast of the
+  arrival rate modulates the pull watermark, so shards pre-drain the queue
+  ahead of a building burst instead of reacting one tick late.
+
+Determinism contract (normative; docs/POLICIES.md is the author guide):
+policy decisions must be a pure function of the visible state — the
+:class:`ShardState` fields, the policy's own config, and what it has
+observed through :meth:`AdmissionPolicy.observe`.  No wall clock, no global
+RNG: two runs with identical inputs must admit identical sequences
+(``tests/test_policies.py`` pins determinism for every registered policy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple, Type
+
+__all__ = [
+    "AdmissionPolicy",
+    "CostPolicy",
+    "DeadlinePolicy",
+    "PolicyContext",
+    "PredictivePolicy",
+    "PullPolicy",
+    "PullStealPolicy",
+    "RoundRobinPolicy",
+    "ShardState",
+    "available_policies",
+    "make_policy",
+    "register_policy",
+    "unregister_policy",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardState:
+    """The per-shard snapshot a policy may read — nothing else.
+
+    Policies never touch ``Simulator`` objects directly: the admission tier
+    builds these snapshots each tick, which is what keeps a policy's
+    decision surface explicit, serializable, and stable across engine
+    refactors (the policy-author contract in docs/POLICIES.md).
+
+    Attributes:
+        index: shard index in ``[0, n_shards)``.
+        pressure: the shard's *effective* pressure — ``Simulator.pressure()``
+            at tick start plus ``inv_workers`` per VU already bound this tick
+            (``inf`` for a dead shard: all workers failed).
+        n_workers: the shard's planned worker count (the partition's split,
+            not the live count).
+        inv_workers: ``1 / n_workers`` — the effective-pressure increment
+            one admitted VU costs.
+        warm_capacity: fraction of the shard's sandbox-pool memory not
+            pinned by running tasks, in ``[0, 1]`` (``Simulator
+            .warm_capacity()``); 0.0 for a dead shard.  High values mean new
+            work can start warm or cold-start without queueing.  Populated
+            by the default ``admit_tick`` only when the policy sets
+            ``uses_warm_capacity = True`` (it costs an O(workers) scan per
+            shard per tick); otherwise ``nan`` — reading it without the
+            flag makes every comparison False, so the mistake is loud
+            (nothing admits) instead of silently wrong.
+        tick_pulls: VUs this shard has already pulled in the current tick.
+        t: simulated time of the tick, seconds.
+    """
+
+    index: int
+    pressure: float
+    n_workers: int
+    inv_workers: float
+    warm_capacity: float
+    tick_pulls: int
+    t: float
+
+
+class PolicyContext:
+    """Mediator between the admission loop and a policy.
+
+    Owns the global waiting queue (FIFO deque, or a priority heap when the
+    policy sets ``orders_queue``) and performs the actual binding
+    (:meth:`admit_next`) with the admission tier's bookkeeping — policies
+    choose, the context executes.  Policies may call only the documented
+    read methods and :meth:`admit_next`.
+    """
+
+    def __init__(
+        self,
+        sims: Sequence,
+        programs: Sequence,
+        worker_split: Sequence[int],
+        inv_workers: Sequence[float],
+        admitted: List[List[int]],
+        admit_t: List[List[float]],
+        pulls: List[int],
+        policy: "AdmissionPolicy",
+        arrivals=None,
+        deadlines=None,
+    ):
+        self.sims = sims
+        self.programs = programs
+        self.worker_split = list(worker_split)
+        self.inv_workers = list(inv_workers)
+        self.admitted = admitted
+        self.admit_t = admit_t
+        self.pulls = pulls
+        self.policy = policy
+        self._arrivals = arrivals
+        self._deadlines = deadlines
+        self.total_workers = sum(self.worker_split)
+        # FIFO deque by default; a min-heap of (queue_key, arrival_seq, gid)
+        # when the policy orders the queue (EDF et al.)
+        self._ordered = bool(policy.orders_queue)
+        self.waiting = [] if self._ordered else deque()
+        self._seq = 0
+
+    # ------------------------------------------------------------- queue
+    @property
+    def n_shards(self) -> int:
+        return len(self.sims)
+
+    @property
+    def waiting_n(self) -> int:
+        """Eligible-but-unadmitted VUs currently in the global queue."""
+        return len(self.waiting)
+
+    def enqueue(self, gid: int) -> None:
+        """Move an eligible arrival into the global queue (tier-internal)."""
+        if self._ordered:
+            heapq.heappush(
+                self.waiting, (self.policy.queue_key(gid, self), self._seq, gid)
+            )
+            self._seq += 1
+        else:
+            self.waiting.append(gid)
+
+    def peek_next(self) -> int:
+        """Global VU id the next :meth:`admit_next` call would bind."""
+        return self.waiting[0][2] if self._ordered else self.waiting[0]
+
+    # ---------------------------------------------------- workload metadata
+    def arrival_of(self, gid: int) -> float:
+        """The VU's admission-eligibility time (seconds; 0.0 if untimed)."""
+        return 0.0 if self._arrivals is None else float(self._arrivals[gid])
+
+    def deadline_of(self, gid: int) -> float:
+        """The VU's *relative* latency deadline (seconds; ``inf`` if none).
+
+        Workloads without deadline metadata read ``inf`` for every VU, which
+        makes deadline-ordered queues degrade to FIFO (arrival order breaks
+        the tie) — a deadline policy on an unannotated workload behaves like
+        plain pull.
+        """
+        if self._deadlines is None:
+            return float("inf")
+        return float(self._deadlines[gid])
+
+    # ------------------------------------------------------------- binding
+    def admit_next(self, k: int, t: float) -> int:
+        """Bind the queue head to shard ``k`` at time ``t``; returns the
+        global VU id.  Performs the engine call (``admit_vu``) and all
+        admission-table bookkeeping."""
+        if self._ordered:
+            gid = heapq.heappop(self.waiting)[2]
+        else:
+            gid = self.waiting.popleft()
+        local = self.sims[k].admit_vu(self.programs[gid], t=t)
+        assert local == len(self.admitted[k])
+        self.admitted[k].append(gid)
+        self.admit_t[k].append(t)
+        self.pulls[k] += 1
+        return gid
+
+    # -------------------------------------------------------------- shards
+    def shard_state(
+        self, k: int, t: float, pressure: Optional[float] = None,
+        warm: Optional[float] = None, tick_pulls: int = 0,
+    ) -> ShardState:
+        return ShardState(
+            index=k,
+            pressure=self.sims[k].pressure() if pressure is None else pressure,
+            n_workers=self.worker_split[k],
+            inv_workers=self.inv_workers[k],
+            warm_capacity=(
+                self.sims[k].warm_capacity() if warm is None else warm
+            ),
+            tick_pulls=tick_pulls,
+            t=t,
+        )
+
+
+class AdmissionPolicy:
+    """Base class / protocol for admission policies (the author contract).
+
+    Subclass, set ``name``, override the hooks you need, and register:
+
+    * :meth:`want_pull` — may this shard bind the next queued VU *right
+      now*?  Called with the shard's live :class:`ShardState` before every
+      single binding.  Default: effective pressure below the config
+      watermark (the original pull behavior).
+    * :meth:`rank_shards` — the tick's shard ordering, as ``(key, index)``
+      min-heap entries; the lowest key pulls first, and every pull bumps
+      the shard's key by ``inv_workers`` (the admission tier's
+      effective-pressure accounting).  Default: pressure-ordered.
+    * ``orders_queue`` + :meth:`queue_key` — opt into a priority-ordered
+      global queue (lowest key admitted first; arrival order breaks ties).
+      Default off: FIFO.
+    * :meth:`observe` — per-tick telemetry feed (new-arrival count) for
+      forecasting policies; called once per tick *before* admission.
+    * ``steals`` — class flag: run ``core.stealing.steal_tick`` after
+      admission each tick (the ``pull+steal`` composition).
+
+    Policies are instantiated fresh per run (``make_policy``), so instance
+    attributes are run-local state; determinism obligations are spelled out
+    in docs/POLICIES.md.
+    """
+
+    #: registry key; subclasses must override.
+    name: str = ""
+    #: run cross-shard work stealing after each admission tick.
+    steals: bool = False
+    #: order the global queue by :meth:`queue_key` instead of FIFO.
+    orders_queue: bool = False
+    #: have ``admit_tick`` populate ``ShardState.warm_capacity`` (an extra
+    #: O(workers) scan per shard per tick; without the flag the field is
+    #: ``nan``).  Set it whenever a hook reads the warm-capacity signal.
+    uses_warm_capacity: bool = False
+
+    def __init__(self, cfg, **kwargs):
+        """``cfg`` is the run's ``AdmissionConfig``; extra ``kwargs`` come
+        from ``AdmissionConfig.policy_args`` (policy-specific knobs)."""
+        self.cfg = cfg
+        for key in kwargs:
+            raise TypeError(f"{type(self).__name__} got unknown policy_args key {key!r}")
+
+    # ----------------------------------------------------------- the hooks
+    def queue_key(self, gid: int, ctx: PolicyContext) -> float:
+        """Priority of VU ``gid`` in the global queue (lower = sooner);
+        only consulted when ``orders_queue`` is set."""
+        return 0.0
+
+    def want_pull(self, state: ShardState) -> bool:
+        """May this shard bind the next queued VU right now?"""
+        return state.pressure < self.cfg.watermark
+
+    def rank_shards(self, states: Sequence[ShardState]) -> List[Tuple[float, int]]:
+        """Min-heap entries ``(key, shard_index)``; lowest key pulls first."""
+        return [(s.pressure, s.index) for s in states]
+
+    def observe(self, t: float, n_new: int, ctx: PolicyContext) -> None:
+        """Per-tick feed: ``n_new`` VUs became eligible at time ``t``."""
+
+    # ------------------------------------------------------------ the tick
+    def admit_tick(self, t: float, ctx: PolicyContext) -> None:
+        """One admission round: bind queued VUs to shards until every shard
+        declines (``want_pull``) or the queue / per-shard batch cap empties.
+
+        The default is the admission tier's pressure-keyed heap — the
+        cluster-level ``PQ_f`` — parameterized by :meth:`rank_shards` and
+        :meth:`want_pull`, with the ``1/n_workers`` effective-pressure
+        accounting per binding.  Policies that aren't heap-shaped
+        (``round_robin``) override the whole tick.
+        """
+        cfg = self.cfg
+        inv = ctx.inv_workers
+        K = ctx.n_shards
+        eff = [ctx.sims[k].pressure() for k in range(K)]
+        if self.uses_warm_capacity:
+            warm = [ctx.sims[k].warm_capacity() for k in range(K)]
+        else:  # unrequested: nan, so an undeclared read fails loudly
+            warm = [float("nan")] * K
+        tick_pulls = [0] * K
+
+        def state(k: int) -> ShardState:
+            return ctx.shard_state(
+                k, t, pressure=eff[k], warm=warm[k], tick_pulls=tick_pulls[k]
+            )
+
+        heap = self.rank_shards([state(k) for k in range(K)])
+        heapq.heapify(heap)
+        while ctx.waiting_n and heap:
+            key, k = heap[0]
+            if not self.want_pull(state(k)):
+                heapq.heappop(heap)  # shard declines: done for this tick
+                continue
+            ctx.admit_next(k, t)
+            eff[k] += inv[k]
+            tick_pulls[k] += 1
+            if cfg.batch_size is not None and tick_pulls[k] >= cfg.batch_size:
+                heapq.heappop(heap)  # per-shard cap reached this tick
+            else:
+                heapq.heapreplace(heap, (key + inv[k], k))
+
+
+# --------------------------------------------------------------- registry
+_REGISTRY: Dict[str, Type[AdmissionPolicy]] = {}
+
+
+def register_policy(cls: Type[AdmissionPolicy]) -> Type[AdmissionPolicy]:
+    """Register an :class:`AdmissionPolicy` subclass under ``cls.name``.
+
+    Usable as a decorator.  Re-registering a taken name raises — call
+    :func:`unregister_policy` first (tests do exactly this round-trip).
+    """
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty `name`")
+    if cls.name in _REGISTRY and _REGISTRY[cls.name] is not cls:
+        raise ValueError(f"admission policy {cls.name!r} is already registered")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def unregister_policy(name: str) -> Type[AdmissionPolicy]:
+    """Remove (and return) a registered policy; unknown names raise."""
+    try:
+        return _REGISTRY.pop(name)
+    except KeyError:
+        raise ValueError(
+            f"unknown admission policy {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_policies() -> List[str]:
+    """Sorted names of every registered admission policy."""
+    return sorted(_REGISTRY)
+
+
+def get_policy_class(name: str) -> Type[AdmissionPolicy]:
+    """Resolve a registered policy class by name (with suggestions)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown admission policy {name!r}; available: "
+            f"{available_policies()}"
+        ) from None
+
+
+def make_policy(name: str, cfg, **kwargs) -> AdmissionPolicy:
+    """Instantiate a fresh policy for one run (``kwargs`` are policy knobs,
+    merged from ``AdmissionConfig.policy_args`` by the admission tier)."""
+    return get_policy_class(name)(cfg, **kwargs)
+
+
+# ------------------------------------------------- the ported three
+@register_policy
+class PullPolicy(AdmissionPolicy):
+    """Watermark pull — the original admission tier behavior, verbatim:
+    pressure-ordered shard heap, pull while below ``cfg.watermark``."""
+
+    name = "pull"
+
+
+@register_policy
+class PullStealPolicy(PullPolicy):
+    """Pull admission plus per-tick cross-shard work stealing
+    (``core.stealing.steal_tick`` runs after every admission round)."""
+
+    name = "pull+steal"
+    steals = True
+
+
+@register_policy
+class RoundRobinPolicy(AdmissionPolicy):
+    """Bind each eligible arrival to the next shard in cyclic order
+    immediately — the arrival-capable static baseline.  Ignores pressure
+    entirely; ``batch_size`` still caps bindings per shard per tick."""
+
+    name = "round_robin"
+
+    def __init__(self, cfg, **kwargs):
+        super().__init__(cfg, **kwargs)
+        self._next = 0  # cyclic cursor, persistent across ticks
+
+    def admit_tick(self, t: float, ctx: PolicyContext) -> None:
+        cfg = self.cfg
+        # consecutive cyclic slots, so a quota of batch_size * K gives every
+        # shard at most batch_size this tick
+        quota = (
+            ctx.waiting_n if cfg.batch_size is None
+            else cfg.batch_size * ctx.n_shards
+        )
+        while ctx.waiting_n and quota > 0:
+            quota -= 1
+            k = self._next % ctx.n_shards
+            self._next += 1
+            ctx.admit_next(k, t)
+
+
+# ------------------------------------------------- the new three
+@register_policy
+class DeadlinePolicy(AdmissionPolicy):
+    """Earliest-deadline-first admission.
+
+    The global queue is ordered by *absolute* deadline — the VU's arrival
+    time plus its relative deadline from the workload metadata
+    (``AdmissionSimulator.run(deadlines=...)``; scenario generators in
+    ``core.workloads`` produce them) — so during a backlog the most urgent
+    VUs bind first, into the uncongested headroom, while slack-rich VUs
+    absorb the congested drain.  Shard selection stays pressure-ordered.
+    Without deadline metadata every key is ``inf`` and arrival order breaks
+    the tie: plain pull.
+    """
+
+    name = "deadline"
+    orders_queue = True
+
+    def queue_key(self, gid: int, ctx: PolicyContext) -> float:
+        return ctx.arrival_of(gid) + ctx.deadline_of(gid)
+
+
+@register_policy
+class CostPolicy(AdmissionPolicy):
+    """Cold-start-cost-aware pull.
+
+    Each shard's pull threshold is effectively scaled by its warm capacity:
+    the ranking/gating key is ``pressure + cost_weight * (1 -
+    warm_capacity)``, so a shard whose sandbox pool is pinned by running
+    work — where a new VU would cold-start or queue for memory — looks more
+    expensive and pulls less, while warm shards soak up arrivals first.
+
+    ``policy_args``: ``cost_weight`` (pressure-units penalty at zero warm
+    capacity; default 0.5).
+    """
+
+    name = "cost"
+    uses_warm_capacity = True
+
+    def __init__(self, cfg, cost_weight: float = 0.5, **kwargs):
+        super().__init__(cfg, **kwargs)
+        if cost_weight < 0:
+            raise ValueError("cost_weight must be >= 0")
+        self.cost_weight = float(cost_weight)
+
+    def _cost(self, s: ShardState) -> float:
+        return s.pressure + self.cost_weight * (1.0 - s.warm_capacity)
+
+    def want_pull(self, state: ShardState) -> bool:
+        return self._cost(state) < self.cfg.watermark
+
+    def rank_shards(self, states: Sequence[ShardState]) -> List[Tuple[float, int]]:
+        return [(self._cost(s), s.index) for s in states]
+
+
+@register_policy
+class PredictivePolicy(AdmissionPolicy):
+    """EWMA arrival-rate forecast modulating the watermark (cheap MPC).
+
+    Each tick the policy folds the newly eligible arrival count into an
+    exponentially weighted moving average; the forecast load — EWMA
+    arrivals per tick spread across the cluster's workers, in pressure
+    units — is added to the pull watermark.  While a burst builds, shards
+    pull *ahead* of it (pre-draining the queue the way a one-step MPC
+    controller would); in calm traffic the EWMA decays and the policy
+    relaxes back to plain pull.
+
+    ``policy_args``: ``alpha`` (EWMA smoothing in (0, 1]; default 0.3) and
+    ``gain`` (forecast-to-watermark coupling; default 1.0).
+    """
+
+    name = "predictive"
+
+    def __init__(self, cfg, alpha: float = 0.3, gain: float = 1.0, **kwargs):
+        super().__init__(cfg, **kwargs)
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        if gain < 0:
+            raise ValueError("gain must be >= 0")
+        self.alpha = float(alpha)
+        self.gain = float(gain)
+        self._rate = 0.0  # EWMA of new arrivals per tick
+        self._watermark = cfg.watermark
+
+    def observe(self, t: float, n_new: int, ctx: PolicyContext) -> None:
+        self._rate += self.alpha * (n_new - self._rate)
+        forecast_pressure = self._rate / max(ctx.total_workers, 1)
+        self._watermark = self.cfg.watermark + self.gain * forecast_pressure
+
+    def want_pull(self, state: ShardState) -> bool:
+        return state.pressure < self._watermark

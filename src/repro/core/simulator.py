@@ -670,6 +670,25 @@ class Simulator:
             return float("inf")
         return (queued + busy) / alive
 
+    def warm_capacity(self) -> float:
+        """Fraction of sandbox-pool memory not pinned by running tasks.
+
+        ``(free + idle) / pool`` summed over live workers, in ``[0, 1]``:
+        idle memory is warm instances a new request can reuse, free memory
+        can host a fresh sandbox without eviction — together they are the
+        headroom to place new work without queueing behind the memory pool.
+        0.0 for a dead cluster (no live workers).  This is the cold-start
+        cost signal admission policies read (``core.policies.CostPolicy``)
+        alongside :meth:`pressure`.
+        """
+        total = busy = 0.0
+        for w in self.workers.values():
+            total += w.pool_mb
+            busy += w.busy_mem_mb
+        if total <= 0.0:
+            return 0.0
+        return (total - busy) / total
+
     def admit_vu(self, program: VUProgram, t: Optional[float] = None) -> int:
         """Admit one closed-loop VU mid-run (the admission tier's pull).
 

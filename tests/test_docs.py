@@ -118,6 +118,20 @@ def test_doc_code_blocks_execute(doc):
             )
 
 
+def test_example_policy_comparison_section_runs():
+    """The serve_cluster policy-comparison section (pull vs deadline on the
+    flash-crowd scenario) runs green at quick scale — the example can't
+    rot even though the quickstart block itself carries the skip marker."""
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "serve_cluster_docs_smoke", ROOT / "examples" / "serve_cluster.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mod.policy_comparison(quick=True, n_shards=2)
+
+
 def test_skip_marker_parsed():
     """The README's human-workflow quickstart block stays unexecuted."""
     blocks = extract_blocks(ROOT / "README.md")

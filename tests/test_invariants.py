@@ -10,13 +10,23 @@ scenario the engine must conserve requests and respect worker physics:
 * per-worker concurrent memory (busy + idle sandboxes) never exceeds the
   pool, checked after every allocation via an instrumented simulator;
 * sharded (K>1) runs are record-for-record a permutation of the monolithic
-  runs of their slices.
+  runs of their slices;
+* under the global admission tier, conservation + exactly-once hold for
+  EVERY registered admission policy (``core.policies``) on a bursty
+  scenario: unique global binding, strictly increasing per-VU submissions
+  through migrations, one migrated record per migration.
 """
 
 import numpy as np
 import pytest
 
-from repro.core import SimConfig, Simulator, available_schedulers, make_scheduler
+from repro.core import (
+    SimConfig,
+    Simulator,
+    available_policies,
+    available_schedulers,
+    make_scheduler,
+)
 from repro.core.trace import make_vu_programs
 
 N_VUS = 16
@@ -117,6 +127,52 @@ def test_sharded_records_permutation_identical_to_monolithic(scheduler):
             g.worker.tolist(), g.cold.tolist(), g.vu.tolist())
     )
     assert sorted(got) == sorted(mono)
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("policy", available_policies())
+def test_admission_conservation_per_policy(policy):
+    """Conservation + exactly-once, for EVERY registered admission policy:
+    each admitted VU binds once globally (a migrated VU appears in two
+    admission tables but completes each request exactly once), per-VU
+    submissions strictly increase through migrations, records respect
+    ``t_done >= t_submit``, and the migrated record count equals the
+    migration schedule length."""
+    import warnings
+
+    from repro.core import SimConfig, make_functions
+    from repro.core.admission import AdmissionConfig, AdmissionSimulator
+    from repro.core.workloads import make_scenario
+
+    funcs = make_functions(seed=0)
+    scn = make_scenario("flash_crowd", funcs, 24, 12.0, seed=7)
+    adm = AdmissionSimulator(
+        2, 8, scheduler="hiku", cfg=SimConfig(mem_pool_mb=1024.0), seed=7,
+        admission=AdmissionConfig(policy=policy, steal_watermark=1.25),
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        run = adm.run(scn.n_vus, 12.0, **scn.run_kwargs())
+    g = run.records
+    assert len(g) > 0, f"{policy}: no requests completed"
+    assert (g.t_done >= g.t_submit).all()
+    # population conservation: admitted + unadmitted == n_vus, ids unique
+    all_gids = [gid for s in run.shards for gid in s.admitted.tolist()]
+    unique = set(all_gids)
+    assert run.admitted + run.unadmitted == scn.n_vus
+    assert len(unique) == run.admitted
+    # a VU appears in at most 1 + (times migrated) admission tables
+    assert len(all_gids) == run.admitted + run.n_migrations
+    # exactly-once: one migrated record per migration, none when off
+    assert int(g.migrated.sum()) == run.n_migrations
+    # per-VU global submissions strictly increase (no duplicated or lost
+    # arrival, even across cross-shard migration)
+    order = np.lexsort((g.t_submit, g.vu))
+    vu, ts = g.vu[order], g.t_submit[order]
+    same_vu = np.diff(vu) == 0
+    assert (np.diff(ts)[same_vu] > 0).all()
+    # merged stream is exactly the union of the per-shard streams
+    assert len(g) == sum(len(s.records) for s in run.shards)
 
 
 @pytest.mark.shard

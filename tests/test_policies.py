@@ -1,0 +1,425 @@
+"""Pluggable admission-policy registry: registration round-trip, byte
+identity of the ported policies against a verbatim replica of the
+pre-registry admission loop, determinism for every registered policy, the
+new deadline/cost/predictive behaviors, the workload scenario suite, and
+the flash-crowd acceptance (deadline beats pull on miss rate, p99 within
+10%)."""
+
+import dataclasses
+import heapq
+import time
+import warnings
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, Simulator, make_functions, make_scheduler
+from repro.core.admission import AdmissionConfig, AdmissionRun, AdmissionSimulator
+from repro.core.policies import (
+    AdmissionPolicy,
+    ShardState,
+    available_policies,
+    get_policy_class,
+    make_policy,
+    register_policy,
+    unregister_policy,
+)
+from repro.core.shard import shard_seed
+from repro.core.stealing import steal_tick
+from repro.core.trace import default_n_events
+from repro.core.workloads import available_scenarios, make_scenario
+
+pytestmark = pytest.mark.shard
+
+FUNCS = make_functions(seed=0)
+
+
+def _quick_scenario(name="flash_crowd", n_vus=24, dur=10.0, seed=0):
+    return make_scenario(name, FUNCS, n_vus, dur, seed=seed), dur
+
+
+def _run(policy, scn, dur, K=2, W=8, seed=0, **adm_kw):
+    adm = AdmissionSimulator(
+        K, W, scheduler="hiku", cfg=SimConfig(mem_pool_mb=1024.0), seed=seed,
+        admission=AdmissionConfig(policy=policy, steal_watermark=1.25, **adm_kw),
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return adm.run(scn.n_vus, dur, **scn.run_kwargs())
+
+
+# ------------------------------------------------------------ the registry
+def test_available_policies_contains_the_six_builtins():
+    names = available_policies()
+    for name in ("pull", "pull+steal", "round_robin", "deadline", "cost", "predictive"):
+        assert name in names
+
+
+def test_unknown_policy_error_lists_available():
+    with pytest.raises(ValueError, match=r"available.*pull"):
+        AdmissionConfig(policy="gossip")
+    with pytest.raises(ValueError, match="available"):
+        get_policy_class("nope")
+    with pytest.raises(ValueError):
+        unregister_policy("never-registered")
+
+
+def test_register_resolve_run_unregister_round_trip():
+    """Satellite acceptance: register -> resolve -> run -> unregister."""
+
+    class EveryOther(AdmissionPolicy):
+        """Admit only on even shards — deliberately quirky but deterministic."""
+
+        name = "every_other"
+
+        def want_pull(self, state):
+            return state.index % 2 == 0 and state.pressure < self.cfg.watermark
+
+    register_policy(EveryOther)
+    try:
+        assert "every_other" in available_policies()
+        assert get_policy_class("every_other") is EveryOther
+        scn, dur = _quick_scenario(n_vus=12)
+        r = _run("every_other", scn, dur)
+        assert isinstance(r, AdmissionRun)
+        # odd shards never pulled
+        assert all(len(r.shards[k].admitted) == 0 for k in range(1, len(r.shards), 2))
+        assert sum(len(s.admitted) for s in r.shards) == r.admitted > 0
+    finally:
+        assert unregister_policy("every_other") is EveryOther
+    assert "every_other" not in available_policies()
+    with pytest.raises(ValueError, match="available"):
+        AdmissionConfig(policy="every_other")
+    # double registration of a taken name is rejected
+    register_policy(EveryOther)
+    try:
+        class Imposter(AdmissionPolicy):
+            name = "every_other"
+
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy(Imposter)
+    finally:
+        unregister_policy("every_other")
+
+
+def test_policy_args_validated_at_config_time():
+    with pytest.raises(TypeError, match="unknown policy_args"):
+        AdmissionConfig(policy="pull", policy_args={"bogus": 1})
+    with pytest.raises(ValueError, match="cost_weight"):
+        AdmissionConfig(policy="cost", policy_args={"cost_weight": -1.0})
+    with pytest.raises(ValueError, match="alpha"):
+        AdmissionConfig(policy="predictive", policy_args={"alpha": 0.0})
+    # well-formed knobs construct fine
+    AdmissionConfig(policy="cost", policy_args={"cost_weight": 0.8})
+
+
+def test_shard_state_is_frozen():
+    s = ShardState(0, 0.0, 4, 0.25, 1.0, 0, 0.0)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.pressure = 1.0
+
+
+# ----------------------------------- byte identity vs the pre-registry tier
+def _legacy_run(adm: AdmissionSimulator, n_vus, duration_s, programs, arrivals=None):
+    """Verbatim replica of the PRE-REGISTRY AdmissionSimulator.run loop
+    (hard-wired pull/round_robin/pull+steal), driving the same engine
+    hooks.  The registry dispatch must reproduce its streams byte-for-byte.
+    """
+    cfg = adm.admission
+    programs = list(programs)
+    arr = np.zeros(n_vus) if arrivals is None else np.asarray(arrivals, np.float64)
+    order = np.argsort(arr, kind="stable")
+    sims = []
+    for k in range(adm.n_shards):
+        sk = shard_seed(adm.seed, k)
+        sched = make_scheduler(adm.scheduler, adm.worker_split[k], seed=sk)
+        sim = Simulator(
+            sched, funcs=adm.funcs,
+            cfg=dataclasses.replace(adm.cfg, n_workers=adm.worker_split[k]), seed=sk,
+        )
+        sim.begin(n_vus=0, duration_s=duration_s, programs=[])
+        sims.append(sim)
+    admitted = [[] for _ in range(adm.n_shards)]
+    admit_t = [[] for _ in range(adm.n_shards)]
+    pulls = [0] * adm.n_shards
+    migrations = []
+    waiting = deque()
+    qpos = 0
+    rr_next = 0
+    tick = 0
+    t = 0.0
+    while True:
+        while qpos < n_vus and arr[order[qpos]] <= t:
+            waiting.append(int(order[qpos]))
+            qpos += 1
+        if t < duration_s and waiting:
+            if cfg.policy == "round_robin":
+                quota = n_vus if cfg.batch_size is None else cfg.batch_size * adm.n_shards
+                while waiting and quota > 0:
+                    quota -= 1
+                    gid = waiting.popleft()
+                    k = rr_next % adm.n_shards
+                    rr_next += 1
+                    sims[k].admit_vu(programs[gid], t=t)
+                    admitted[k].append(gid)
+                    admit_t[k].append(t)
+                    pulls[k] += 1
+            else:
+                tick_pulls = [0] * adm.n_shards
+                heap = [(sims[k].pressure(), k) for k in range(adm.n_shards)]
+                heapq.heapify(heap)
+                while waiting and heap:
+                    p, k = heap[0]
+                    if p >= cfg.watermark:
+                        break
+                    gid = waiting.popleft()
+                    sims[k].admit_vu(programs[gid], t=t)
+                    admitted[k].append(gid)
+                    admit_t[k].append(t)
+                    pulls[k] += 1
+                    tick_pulls[k] += 1
+                    if cfg.batch_size is not None and tick_pulls[k] >= cfg.batch_size:
+                        heapq.heappop(heap)
+                    else:
+                        heapq.heapreplace(heap, (p + adm.inv_workers[k], k))
+        if cfg.policy == "pull+steal" and t < duration_s:
+            moves = steal_tick(
+                sims, steal_watermark=cfg.steal_watermark,
+                pull_watermark=cfg.watermark, inv_workers=adm.inv_workers,
+                t=t, max_moves=cfg.steal_batch,
+            )
+            for mv in moves:
+                gid = admitted[mv.src][mv.src_vu]
+                admitted[mv.dst].append(gid)
+                admit_t[mv.dst].append(t)
+            migrations.extend(moves)
+        if t >= duration_s and all(s.done for s in sims):
+            break
+        tick += 1
+        t = tick * cfg.tick_s
+        for sim in sims:
+            sim.step_until(t)
+    return adm._merge(
+        sims, admitted, admit_t, pulls, n_vus, 0.0, [], [], migrations
+    )
+
+
+@pytest.mark.parametrize("policy", ["pull", "round_robin", "pull+steal"])
+@pytest.mark.parametrize("batch_size", [None, 2])
+def test_ported_policies_byte_identical_to_pre_registry_loop(policy, batch_size):
+    """Acceptance: the three original behaviors, dispatched through the
+    registry, reproduce the pre-registry admission tier byte-for-byte —
+    records, assignments, admission tables and migration schedules."""
+    from repro.core.admission import make_sleeper_programs
+
+    K, W, VUS, DUR = 2, 8, 24, 12.0
+    cfg = AdmissionConfig(policy=policy, steal_watermark=1.25, batch_size=batch_size)
+    programs = make_sleeper_programs(FUNCS, VUS, default_n_events(DUR), 3)
+    arrivals = [(vu % 3) * 2.0 for vu in range(VUS)]
+    adm = AdmissionSimulator(
+        K, W, scheduler="hiku", cfg=SimConfig(mem_pool_mb=1024.0), seed=3,
+        admission=cfg,
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        new = adm.run(VUS, DUR, programs=programs, arrivals=arrivals)
+        adm2 = AdmissionSimulator(
+            K, W, scheduler="hiku", cfg=SimConfig(mem_pool_mb=1024.0), seed=3,
+            admission=cfg,
+        )
+        old = _legacy_run(adm2, VUS, DUR, programs, arrivals)
+    assert new.records.equals(old.records)
+    assert np.array_equal(new.assign_t, old.assign_t)
+    assert np.array_equal(new.assign_w, old.assign_w)
+    assert [s.admitted.tolist() for s in new.shards] == [
+        s.admitted.tolist() for s in old.shards
+    ]
+    assert [s.pulls for s in new.shards] == [s.pulls for s in old.shards]
+    assert new.migrations == old.migrations
+
+
+def test_deadline_without_metadata_degrades_to_pull():
+    """EDF with no deadline annotations is FIFO by arrival: identical
+    streams to plain pull (the documented fallback)."""
+    scn, dur = _quick_scenario("on_off", n_vus=16)
+    scn = dataclasses.replace(scn, deadlines=None)
+    r_pull = _run("pull", scn, dur)
+    r_dl = _run("deadline", scn, dur)
+    assert r_dl.records.equals(r_pull.records)
+    assert np.array_equal(r_dl.assign_w, r_pull.assign_w)
+
+
+# ------------------------------------------------------------- determinism
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+def test_every_registered_policy_is_deterministic(policy):
+    scn, dur = _quick_scenario("flash_crowd", n_vus=20)
+    r1 = _run(policy, scn, dur)
+    r2 = _run(policy, scn, dur)
+    assert r1.records.equals(r2.records)
+    assert np.array_equal(r1.assign_t, r2.assign_t)
+    assert [s.admitted.tolist() for s in r1.shards] == [
+        s.admitted.tolist() for s in r2.shards
+    ]
+
+
+# ------------------------------------------------------ the new behaviors
+def test_flash_crowd_acceptance_deadline_beats_pull():
+    """Acceptance: on the flash-crowd scenario the deadline policy beats
+    pull on deadline-miss rate with p99 within 10% (the bench_policies
+    acceptance row, pinned at quick scale)."""
+    from benchmarks.bench_policies import QUICK, run_cell
+
+    scn = make_scenario(
+        "flash_crowd", FUNCS, QUICK["n_vus"], QUICK["duration_s"], seed=0
+    )
+    _, m_pull = run_cell("pull", scn, QUICK, seed=0)
+    _, m_dl = run_cell("deadline", scn, QUICK, seed=0)
+    assert m_pull.deadline_miss_rate > 0, "scenario must actually miss under pull"
+    assert m_dl.deadline_miss_rate < m_pull.deadline_miss_rate
+    assert abs(m_dl.p99_ms - m_pull.p99_ms) <= 0.10 * m_pull.p99_ms
+
+
+def test_deadline_policy_orders_queue_by_edf():
+    """Tight-SLO VUs admitted under backlog bind before slack ones."""
+    scn, dur = _quick_scenario("flash_crowd", n_vus=24)
+    r = _run("deadline", scn, dur)
+    tight = set(np.flatnonzero(np.isfinite(scn.deadlines)).tolist())
+    admit_time = {}
+    for s in r.shards:
+        for g, t in zip(s.admitted.tolist(), s.admit_t.tolist()):
+            admit_time.setdefault(g, t)
+    spike_arrival = scn.arrivals[sorted(tight)[0]]
+    tight_waits = [admit_time[g] - scn.arrivals[g] for g in tight if g in admit_time]
+    # every tight VU admitted, promptly (spike VUs without SLO wait longer)
+    assert len(tight_waits) == len(tight)
+    spike_loose = [
+        g for g in range(scn.n_vus)
+        if g not in tight and scn.arrivals[g] >= spike_arrival and g in admit_time
+    ]
+    if spike_loose:  # backlogged slack VUs bind strictly later on average
+        loose_waits = [admit_time[g] - scn.arrivals[g] for g in spike_loose]
+        assert np.mean(tight_waits) <= np.mean(loose_waits)
+
+
+def test_cost_policy_prefers_warm_shards():
+    """A shard with zero warm capacity is gated harder than a warm one."""
+    cfg = AdmissionConfig(policy="cost")
+    pol = make_policy("cost", cfg)
+    warm = ShardState(0, 0.5, 4, 0.25, 1.0, 0, 0.0)
+    cold = ShardState(1, 0.5, 4, 0.25, 0.0, 0, 0.0)
+    assert pol.want_pull(warm)
+    assert not pol.want_pull(cold)  # 0.5 + 0.5 penalty >= 0.75 watermark
+    keys = dict((k, key) for key, k in pol.rank_shards([warm, cold]))
+    assert keys[0] < keys[1]
+
+
+def test_predictive_policy_raises_watermark_under_bursts():
+    cfg = AdmissionConfig(policy="predictive")
+    pol = make_policy("predictive", cfg)
+
+    class _Ctx:
+        total_workers = 8
+
+    assert pol._watermark == cfg.watermark
+    pol.observe(0.0, 16, _Ctx())  # a burst: 16 arrivals in one tick
+    assert pol._watermark > cfg.watermark
+    high = pol._watermark
+    for i in range(1, 60):  # long calm: forecast decays back
+        pol.observe(i * 0.25, 0, _Ctx())
+    assert cfg.watermark <= pol._watermark < high
+    assert pol._watermark == pytest.approx(cfg.watermark, abs=1e-3)
+
+
+def test_warm_capacity_signal_bounds():
+    sim = Simulator(make_scheduler("hiku", 2, seed=0), cfg=SimConfig(n_workers=2), seed=0)
+    sim.begin(n_vus=0, duration_s=5.0, programs=[])
+    assert sim.warm_capacity() == 1.0  # idle cluster: whole pool is headroom
+    dead = Simulator(make_scheduler("hiku", 1, seed=0), cfg=SimConfig(n_workers=1), seed=0)
+    dead.inject_failure(0.5, 0)
+    dead.begin(n_vus=0, duration_s=5.0, programs=[])
+    dead.step_until(1.0)
+    assert dead.warm_capacity() == 0.0  # dead cluster: no headroom at all
+    busy = Simulator(make_scheduler("hiku", 2, seed=0), cfg=SimConfig(n_workers=2), seed=0)
+    busy.begin(n_vus=8, duration_s=5.0)
+    busy.step_until(0.1)
+    assert 0.0 <= busy.warm_capacity() < 1.0  # running tasks pin pool memory
+
+
+# --------------------------------------------------------- workload suite
+def test_scenario_registry_and_unknown_name():
+    assert available_scenarios() == ["diurnal", "flash_crowd", "heavy_tail", "on_off"]
+    with pytest.raises(ValueError, match="available"):
+        make_scenario("tsunami", FUNCS, 8, 10.0)
+
+
+@pytest.mark.parametrize("name", sorted(available_scenarios()))
+def test_scenarios_replay_bit_exactly(name):
+    """Scenario generation is a pure function of (seed, vu) — the identity
+    seeding contract extended to the workload tier."""
+    a = make_scenario(name, FUNCS, 16, 12.0, seed=5)
+    b = make_scenario(name, FUNCS, 16, 12.0, seed=5)
+    c = make_scenario(name, FUNCS, 16, 12.0, seed=6)
+    assert np.array_equal(a.arrivals, b.arrivals)
+    assert not np.array_equal(a.arrivals, c.arrivals)
+    if a.deadlines is None:
+        assert b.deadlines is None
+    else:
+        assert np.array_equal(a.deadlines, b.deadlines)
+    for pa, pb in zip(a.programs, b.programs):
+        assert np.array_equal(pa.func_idx, pb.func_idx)
+        assert np.array_equal(pa.sleep_s, pb.sleep_s)
+
+
+@pytest.mark.parametrize("name", sorted(available_scenarios()))
+def test_scenarios_shape_and_admissibility(name):
+    dur = 12.0
+    scn = make_scenario(name, FUNCS, 16, dur, seed=1)
+    assert scn.n_vus == 16 and scn.arrivals.shape == (16,)
+    assert (scn.arrivals >= 0).all()
+    # no VU lands in the end-of-run admission blind window by construction
+    assert scn.arrivals.max() < 0.9 * dur
+    n_ev = default_n_events(dur)
+    for p in scn.programs:
+        assert p.func_idx.shape == (n_ev,)
+        assert (p.func_idx >= 0).all() and (p.func_idx < len(FUNCS)).all()
+        assert (p.sleep_s >= 0).all()
+
+
+def test_run_validates_deadlines_shape():
+    adm = AdmissionSimulator(2, 4, seed=0)
+    scn, dur = _quick_scenario(n_vus=8)
+    with pytest.raises(ValueError, match="deadlines"):
+        adm.run(8, dur, programs=scn.programs, arrivals=scn.arrivals,
+                deadlines=[1.0])
+
+
+def test_deadline_miss_rate_zero_without_metadata():
+    scn, dur = _quick_scenario("flash_crowd", n_vus=12)
+    r = _run("pull", scn, dur)
+    assert r.summarize(dur).deadline_miss_rate >= 0.0
+    bare = dataclasses.replace(scn, deadlines=None)
+    r2 = _run("pull", bare, dur)
+    m = r2.summarize(dur)
+    assert m.deadline_miss_rate == 0.0
+
+
+def test_legacy_pull_tick_shim_still_drives_external_queue():
+    """The direct-drive _pull_tick entry point (kept for tests/ad-hoc
+    drivers) still admits from a caller-owned deque."""
+    from repro.core.trace import make_vu_programs
+
+    adm = AdmissionSimulator(2, 4, scheduler="hiku", seed=0)
+    progs = make_vu_programs(FUNCS, 4, 32, 0)
+    sims = []
+    for k in range(2):
+        sim = Simulator(
+            make_scheduler("hiku", 2, seed=k), funcs=FUNCS,
+            cfg=SimConfig(n_workers=2), seed=k,
+        )
+        sim.begin(n_vus=0, duration_s=10.0, programs=[])
+        sims.append(sim)
+    waiting = deque(range(4))
+    admitted, admit_t, pulls = [[], []], [[], []], [0, 0]
+    adm._pull_tick(0.0, sims, progs, waiting, admitted, admit_t, pulls)
+    assert sum(pulls) == 4 and not waiting

@@ -1,0 +1,193 @@
+"""Chaos matrix: every admission policy under every fault pattern.
+
+The failure-mode counterpart of ``bench_policies``: the same seeded
+``on_off`` bursty traffic runs under each declarative fault plan from
+``core.chaos`` —
+
+* ``shard_kill`` — a correlated wave kills every worker of shard 0 (the
+  "rack loses power" pattern that strands queued work without salvage);
+* ``spot`` — preemption waves with a notice window and autoscaler
+  replacements (policies see the doomed workers coming);
+* ``rolling`` — a deterministic rolling restart marching through the fleet;
+* ``flappy`` — gray failure: workers cycling crash/repair forever.
+
+Per cell: p99 / mean latency for surviving traffic, stranded tasks (queued
+work left on dead shards — the §10 acceptance signal, 0 with salvage on),
+lost tasks + lost rate (retry budget exhausted), resubmits, salvage count,
+and recovery-latency percentiles (first failure to eventual completion).
+
+Two baselines run beside the registered policies on every scenario, both
+under the default ``pull`` policy:
+
+* ``pull@nosalvage`` — modern retry/backoff but ``AdmissionConfig(salvage=
+  False)``: dead-shard work strands;
+* ``pull@legacy`` — the pre-chaos engine emulated exactly
+  (``retry_budget=None, retry_backoff=1.0, salvage off``): infinite flat
+  retries, no salvage — requests on dead shards spin forever as stranded
+  outstanding work.
+
+Acceptance (pinned by tests/test_chaos.py): under ``shard_kill``, salvage
+strands zero queued tasks while both baselines strand > 0, and the salvage
+run's lost rate is below the no-salvage baseline's effective loss at
+comparable surviving-traffic p99.
+"""
+
+from __future__ import annotations
+
+import time
+import warnings
+
+FULL = dict(n_shards=4, n_workers=32, n_vus=96, duration_s=40.0, mem_pool_mb=1024.0)
+QUICK = dict(n_shards=2, n_workers=8, n_vus=32, duration_s=14.0, mem_pool_mb=1024.0)
+
+FULL_FAULTS = ("shard_kill", "spot", "rolling", "flappy")
+QUICK_FAULTS = ("shard_kill", "rolling")
+
+#: baseline engine/tier configs beside the policy matrix (policy is pull)
+BASELINES = ("pull@nosalvage", "pull@legacy")
+
+
+def make_plan(name: str, p: dict, seed: int = 0):
+    """Compile fault scenario ``name`` for protocol ``p`` (pure function)."""
+    from repro.core import chaos
+
+    n_shards, n_workers, dur = p["n_shards"], p["n_workers"], p["duration_s"]
+    if name == "shard_kill":
+        return chaos.shard_kill_wave(
+            n_shards, n_workers, shards=[0], t_kill=0.35 * dur, jitter_s=0.2,
+            seed=seed,
+        )
+    if name == "spot":
+        return chaos.spot_preemption(
+            n_workers, n_waves=2, wave_size=max(1, n_workers // 8),
+            t0=0.25 * dur, t1=0.6 * dur, notice_s=2.0, replace_after_s=4.0,
+            seed=seed,
+        )
+    if name == "rolling":
+        return chaos.rolling_restart(
+            n_workers, t0=0.3 * dur, downtime_s=2.0, stagger_s=1.0,
+            batch=max(1, n_workers // 8),
+        )
+    if name == "flappy":
+        return chaos.flappy_workers(
+            range(0, n_workers, 4), dur, mtbf_s=8.0, mttr_s=2.0, t0=1.0,
+            seed=seed,
+        )
+    raise ValueError(f"unknown fault scenario {name!r}")
+
+
+def run_cell(policy: str, scenario, p: dict, seed: int = 0):
+    """One (policy-or-baseline, fault scenario) cell -> (run, metrics).
+
+    ``policy`` is a registered policy name, or one of :data:`BASELINES`
+    (``pull`` admission with salvage off / the legacy engine emulated).
+    """
+    from repro.core import SimConfig
+    from repro.core.admission import AdmissionConfig, AdmissionSimulator
+
+    cfg_kw = dict(mem_pool_mb=p["mem_pool_mb"])
+    adm_kw = dict(policy="pull" if policy in BASELINES else policy,
+                  steal_watermark=1.25)
+    if policy in BASELINES:
+        adm_kw["salvage"] = False
+    if policy == "pull@legacy":
+        cfg_kw.update(retry_budget=None, retry_backoff=1.0)
+    adm = AdmissionSimulator(
+        p["n_shards"], p["n_workers"], scheduler="hiku",
+        cfg=SimConfig(**cfg_kw), seed=seed,
+        admission=AdmissionConfig(**adm_kw),
+    )
+    with warnings.catch_warnings():
+        # killed capacity legitimately leaves VUs unadmitted mid-outage
+        warnings.simplefilter("ignore", RuntimeWarning)
+        r = adm.run(scenario.n_vus, p["duration_s"], **scenario.run_kwargs())
+    return r, r.summarize(p["duration_s"])
+
+
+def _fmt(r, m) -> str:
+    return (
+        f"p99_ms={m.p99_ms:.0f};mean_ms={m.mean_latency_ms:.0f};"
+        f"stranded={r.stranded};lost={r.lost_tasks};"
+        f"lost_rate={m.lost_task_rate:.4f};resubmits={r.resubmits};"
+        f"salvages={r.n_salvages};rec_p99_ms={m.recovery_p99_ms:.0f};"
+        f"requests={m.n_requests}"
+    )
+
+
+def run(quick: bool = False):
+    import dataclasses
+
+    from repro.core import make_functions
+    from repro.core.policies import available_policies
+    from repro.core.workloads import make_scenario
+
+    from .common import save_json
+
+    p = QUICK if quick else FULL
+    seed = 0
+    funcs = make_functions(seed=seed)
+    columns = list(available_policies()) + list(BASELINES)
+    fault_names = QUICK_FAULTS if quick else FULL_FAULTS
+    base = make_scenario("on_off", funcs, p["n_vus"], p["duration_s"], seed=seed)
+    rows = []
+    payload = {"params": dict(p), "columns": columns, "faults": list(fault_names)}
+    for fname in fault_names:
+        plan = make_plan(fname, p, seed=seed)
+        scn = dataclasses.replace(base, faults=plan)
+        cell = {}
+        for col in columns:
+            t0 = time.perf_counter()
+            r, m = run_cell(col, scn, p, seed=seed)
+            wall = time.perf_counter() - t0
+            cell[col] = (r, m)
+            rows.append(
+                (
+                    f"chaos/{fname}/{col}",
+                    wall / max(m.n_requests, 1) * 1e6,
+                    _fmt(r, m),
+                )
+            )
+        payload[fname] = {
+            "plan": {"name": plan.name, "n_events": len(plan),
+                     "horizon_s": plan.horizon},
+            **{
+                col.replace("+", "_").replace("@", "_"): {
+                    "p99_ms": m.p99_ms,
+                    "mean_ms": m.mean_latency_ms,
+                    "stranded": r.stranded,
+                    "lost_tasks": r.lost_tasks,
+                    "lost_task_rate": m.lost_task_rate,
+                    "resubmits": r.resubmits,
+                    "salvages": r.n_salvages,
+                    "recovery_p50_ms": m.recovery_p50_ms,
+                    "recovery_p99_ms": m.recovery_p99_ms,
+                    "n_requests": m.n_requests,
+                }
+                for col, (r, m) in cell.items()
+            },
+        }
+        if fname == "shard_kill":
+            # the §10 acceptance row: salvage vs the stranding baselines
+            (r_pull, m_pull) = cell["pull"]
+            (r_nosal, m_nosal) = cell["pull@nosalvage"]
+            (r_leg, _) = cell["pull@legacy"]
+            rows.append(
+                (
+                    "chaos/shard_kill/salvage_vs_baselines",
+                    0.0,
+                    f"stranded_salvage={r_pull.stranded};"
+                    f"stranded_nosalvage={r_nosal.stranded};"
+                    f"stranded_legacy={r_leg.stranded};"
+                    f"lost_rate_salvage={m_pull.lost_task_rate:.4f};"
+                    f"lost_rate_nosalvage={m_nosal.lost_task_rate:.4f};"
+                    f"p99_salvage={m_pull.p99_ms:.0f};"
+                    f"p99_nosalvage={m_nosal.p99_ms:.0f}",
+                )
+            )
+    save_json("chaos", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

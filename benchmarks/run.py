@@ -30,6 +30,7 @@ def main(argv=None) -> None:
 
     from . import (
         bench_admission,
+        bench_chaos,
         bench_coldstart,
         bench_concurrency,
         bench_imbalance,
@@ -66,6 +67,7 @@ def main(argv=None) -> None:
         "admission": bench_admission,
         "stealing": bench_stealing,
         "policies": bench_policies,
+        "chaos": bench_chaos,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -22,6 +22,11 @@ end-to-end tour; each symbol's docstring states which contracts bind it):
   contract), ``Scenario``/``make_scenario``/``available_scenarios``
   (bursty workload suite), ``StolenTask``/``Migration``/``steal_tick``
   (cross-shard work stealing over the admission co-run);
+* chaos — ``FaultEvent``/``FaultPlan`` (declarative seeded fault
+  schedules) with the ``shard_kill_wave``/``spot_preemption``/
+  ``rolling_restart``/``flappy_workers`` generators, plus
+  ``SalvagedVU``/``Salvage``/``drain_tick`` (dead-shard drain with
+  exactly-once recovery; docs/ARCHITECTURE.md §10 is the contract);
 * JAX form — ``JIQState``/``init_state``/``sched_step``/``sched_many``/
   ``sched_many_fused`` + the ``ARRIVAL``/``FINISH``/``EVICT`` event kinds
   (vectorized Algorithm 1, Pallas-fused on TPU).
@@ -34,6 +39,14 @@ from .admission import (
     AdmissionRun,
     AdmissionShard,
     AdmissionSimulator,
+)
+from .chaos import (
+    FaultEvent,
+    FaultPlan,
+    flappy_workers,
+    rolling_restart,
+    shard_kill_wave,
+    spot_preemption,
 )
 from .hiku import HikuScheduler
 from .jax_sched import (
@@ -72,8 +85,8 @@ from .shard import (
     StreamChunk,
     shard_seed,
 )
-from .simulator import SimConfig, Simulator, StolenTask
-from .stealing import Migration, steal_tick
+from .simulator import SalvagedVU, SimConfig, Simulator, StolenTask
+from .stealing import Migration, Salvage, drain_tick, steal_tick
 from .trace import FunctionSpec, default_n_events, make_functions, make_vu_programs
 from .workloads import Scenario, available_scenarios, make_scenario
 
@@ -86,6 +99,8 @@ __all__ = [
     "AdmissionSimulator",
     "EVICT",
     "FINISH",
+    "FaultEvent",
+    "FaultPlan",
     "FunctionSpec",
     "HikuScheduler",
     "JIQState",
@@ -95,6 +110,8 @@ __all__ = [
     "RecordColumns",
     "RequestRecord",
     "RunMetrics",
+    "Salvage",
+    "SalvagedVU",
     "Scenario",
     "Scheduler",
     "ShardResult",
@@ -112,16 +129,21 @@ __all__ = [
     "latency_cdf",
     "load_cv_per_second",
     "default_n_events",
+    "drain_tick",
+    "flappy_workers",
     "make_functions",
     "make_policy",
     "make_scenario",
     "make_scheduler",
     "make_vu_programs",
     "register_policy",
+    "rolling_restart",
     "sched_many",
     "sched_many_fused",
     "sched_step",
+    "shard_kill_wave",
     "shard_seed",
+    "spot_preemption",
     "steal_tick",
     "summarize",
     "summarize_window",

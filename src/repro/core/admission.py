@@ -58,6 +58,7 @@ populations the static partition cannot balance, and
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 import warnings
@@ -70,8 +71,8 @@ from .policies import PolicyContext, get_policy_class, make_policy
 from .records import RecordColumns
 from .scheduler import make_scheduler
 from .shard import merge_assignments, merge_window, shard_seed, split_even
-from .simulator import SimConfig, Simulator
-from .stealing import Migration, steal_tick
+from .simulator import SalvagedVU, SimConfig, Simulator
+from .stealing import Migration, Salvage, drain_tick, steal_tick
 from .trace import (
     FunctionSpec,
     VUProgram,
@@ -128,6 +129,13 @@ class AdmissionConfig:
             arguments to the policy constructor (e.g. ``{"cost_weight":
             0.8}`` for ``cost``, ``{"alpha": 0.5, "gain": 2.0}`` for
             ``predictive``).
+        salvage: run the dead-shard drain (``core.stealing.drain_tick``)
+            each tick: when a shard's last worker dies, its queued tasks
+            and mid-think VUs are salvaged back through the admission tier
+            onto live shards instead of stranding (§10 failure contract).
+            On by default — ``False`` is the no-salvage baseline
+            ``benchmarks/bench_chaos.py`` scores against.  With no fault
+            plan the drain never fires either way.
     """
 
     watermark: float = 0.75
@@ -137,6 +145,7 @@ class AdmissionConfig:
     steal_watermark: float = 1.5
     steal_batch: Optional[int] = None
     policy_args: Optional[Mapping[str, object]] = None
+    salvage: bool = True
 
     def __post_init__(self):
         cls = get_policy_class(self.policy)  # unknown name -> available list
@@ -177,6 +186,13 @@ class AdmissionShard:
     n_events: int
     stolen_out: int = 0  # queued tasks other shards stole from this one
     stolen_in: int = 0  # stolen tasks this shard received and re-injected
+    # failure telemetry (0 on fault-free runs; see ARCHITECTURE.md §10)
+    resubmits: int = 0  # failure-retry pushes this shard performed
+    lost_tasks: int = 0  # tasks dropped after exhausting the retry budget
+    salvaged_out: int = 0  # VUs drained off this shard while it was dead
+    salvaged_in: int = 0  # salvaged VUs re-homed onto this shard
+    outstanding: int = 0  # submitted-but-unresolved requests at run end
+    alive: bool = True  # any live worker left at run end? (dead => stranded)
 
 
 @dataclasses.dataclass
@@ -201,11 +217,47 @@ class AdmissionRun:
     #: per-global-VU arrival times (s) — the miss clock starts here, so
     #: admission-queue wait is charged against the deadline
     arrival_s: Optional[np.ndarray] = None
+    #: dead-shard drain moves (``AdmissionConfig.salvage``; empty without
+    #: faults) — one row per re-homed VU, ``in_flight`` rows carried a
+    #: lost request with them
+    salvages: List[Salvage] = dataclasses.field(default_factory=list)
+    #: in-flight requests of salvaged VUs that never found a live home (the
+    #: whole cluster stayed dark through the deadline) — counted as lost
+    unsalvaged: int = 0
+    #: failed-request recovery latencies (first failure -> completion, s),
+    #: concatenated across shards — RunMetrics recovery percentiles
+    recovery_s: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0)
+    )
 
     @property
     def n_migrations(self) -> int:
         """Cross-shard task migrations performed (``pull+steal`` only)."""
         return len(self.migrations)
+
+    @property
+    def n_salvages(self) -> int:
+        """VUs re-homed off dead shards by the drain."""
+        return len(self.salvages)
+
+    @property
+    def lost_tasks(self) -> int:
+        """Requests dropped for good: retry budgets exhausted on any shard,
+        plus in-flight requests of VUs that never found a live home."""
+        return sum(s.lost_tasks for s in self.shards) + self.unsalvaged
+
+    @property
+    def resubmits(self) -> int:
+        """Failure-retry pushes across all shards."""
+        return sum(s.resubmits for s in self.shards)
+
+    @property
+    def stranded(self) -> int:
+        """Submitted-but-unresolved requests stuck on *dead* shards at run
+        end — work that can never complete (the §10 acceptance signal:
+        with salvage on this is 0; live shards' end-of-run in-flight work
+        is normal and not counted)."""
+        return sum(s.outstanding for s in self.shards if not s.alive)
 
     @property
     def shard_requests(self) -> np.ndarray:
@@ -221,6 +273,8 @@ class AdmissionRun:
         return summarize(
             self.records, (self.assign_t, self.assign_w), self.workers, duration_s,
             deadline_ms=self.deadline_ms, arrival_s=self.arrival_s,
+            resubmits=self.resubmits, lost_tasks=self.lost_tasks,
+            recovery_s=self.recovery_s,
         )
 
 
@@ -364,6 +418,55 @@ class AdmissionSimulator:
         # per-shard effective-pressure increment per admitted/stolen VU
         self.inv_workers = [1.0 / max(n, 1) for n in self.worker_split]
         self.funcs = make_functions(seed=self.seed)
+        # fault schedule over GLOBAL worker ids (chaos.FaultPlan targets):
+        # resolved to (shard, local) pairs when run() builds the shard sims
+        self._failures: List[Tuple[float, int]] = []
+        self._additions: List[Tuple[float, int]] = []
+        self._notices: List[Tuple[float, int, float]] = []  # (t, gworker, until)
+
+    # ------------------------------------------------------------- faults
+    def _locate(self, worker: int, hook: str) -> Tuple[int, int]:
+        """Global worker id -> (shard, local id) under the static partition.
+
+        Ids outside ``[0, n_workers)`` are rejected — like the sharded
+        driver, the admission tier's merge remaps by fixed shard offsets, so
+        capacity beyond the partition would collide after the merge; revive
+        failed ids instead of inventing new ones."""
+        if not 0 <= worker < self.n_workers:
+            raise ValueError(
+                f"{hook}: global worker id {worker} out of range "
+                f"[0, {self.n_workers}) — the admission tier's partition is "
+                "static; inject_worker revives failed ids only"
+            )
+        k = bisect.bisect_right(self.worker_offsets, worker) - 1
+        return k, worker - self.worker_offsets[k]
+
+    def inject_failure(self, t: float, worker: int) -> None:
+        """Schedule global worker ``worker`` to fail at time ``t`` (chaos
+        hook; ``core.chaos.FaultPlan.apply`` drives this).  Validated
+        against the partition here and against the run deadline by the
+        owning shard's ``begin()``."""
+        self._locate(worker, "inject_failure")
+        self._failures.append((float(t), int(worker)))
+
+    def inject_worker(self, t: float, worker: int) -> None:
+        """Schedule global worker ``worker`` to (re)join at time ``t`` —
+        the revival path that brings a dead shard back as an
+        admission/steal candidate."""
+        self._locate(worker, "inject_worker")
+        self._additions.append((float(t), int(worker)))
+
+    def inject_notice(self, t: float, worker: int, until: float) -> None:
+        """Advisory preemption notice: ``worker`` will fail at ``until``.
+
+        Never load-bearing — policies see it as ``ShardState
+        .doomed_workers`` between ``t`` and ``until`` and may shed load
+        early; the kill itself needs its own ``inject_failure`` (the
+        ``spot_preemption`` plan emits both)."""
+        self._locate(worker, "inject_notice")
+        if until < t:
+            raise ValueError(f"inject_notice: until={until} precedes t={t}")
+        self._notices.append((float(t), int(worker), float(until)))
 
     # ----------------------------------------------------------------- run
     def run(
@@ -373,6 +476,7 @@ class AdmissionSimulator:
         programs: Optional[Sequence[VUProgram]] = None,
         arrivals: Optional[Sequence[float]] = None,
         deadlines: Optional[Sequence[float]] = None,
+        faults: Optional["FaultPlan"] = None,  # noqa: F821 (core.chaos)
     ) -> AdmissionRun:
         """Co-run the K shards under the global admission queue.
 
@@ -401,6 +505,11 @@ class AdmissionSimulator:
                 a VU that never completes counts as missed; later
                 requests are not scored).  Scenario generators in
                 ``core.workloads`` produce these.
+            faults: optional ``core.chaos.FaultPlan`` applied to this run —
+                equivalent to calling :meth:`inject_failure` /
+                :meth:`inject_worker` / :meth:`inject_notice` for each
+                event before the run.  Scenario bundles carry one in
+                ``Scenario.faults``.
 
         Any VU still unadmitted at the deadline is reported on
         ``AdmissionRun.unadmitted`` and raises a ``RuntimeWarning`` — a
@@ -435,6 +544,8 @@ class AdmissionSimulator:
             if dl.shape != (n_vus,):
                 raise ValueError(f"deadlines shape {dl.shape} != ({n_vus},)")
         order = np.argsort(arr, kind="stable")  # admission-queue order
+        if faults is not None:
+            faults.apply(self)
 
         sims: List[Simulator] = []
         for k in range(self.n_shards):
@@ -446,8 +557,21 @@ class AdmissionSimulator:
                 cfg=dataclasses.replace(self.cfg, n_workers=self.worker_split[k]),
                 seed=sk,
             )
-            sim.begin(n_vus=0, duration_s=duration_s, programs=[])
             sims.append(sim)
+        # route the fault schedule to the owning shards, then arm the loops
+        # (begin() validates each shard's schedule against the deadline)
+        for ft, gw in self._failures:
+            k, local = self._locate(gw, "inject_failure")
+            sims[k].inject_failure(ft, local)
+        for ft, gw in self._additions:
+            k, local = self._locate(gw, "inject_worker")
+            sims[k].inject_worker(ft, local)
+        notices = []  # (t_notice, shard, t_kill), doomed-worker signal
+        for ft, gw, until in self._notices:
+            k, _ = self._locate(gw, "inject_notice")
+            notices.append((ft, k, until))
+        for sim in sims:
+            sim.begin(n_vus=0, duration_s=duration_s, programs=[])
 
         admitted: List[List[int]] = [[] for _ in range(self.n_shards)]
         admit_t: List[List[float]] = [[] for _ in range(self.n_shards)]
@@ -468,6 +592,8 @@ class AdmissionSimulator:
         qpos = 0
         queue_t: List[float] = []
         queue_depth: List[int] = []
+        salvages: List[Salvage] = []
+        salvage_buf: List[Tuple[int, SalvagedVU]] = []
         tick = 0
         t = 0.0
         t0 = time.perf_counter()
@@ -478,6 +604,25 @@ class AdmissionSimulator:
                 qpos += 1
                 n_new += 1
             policy.observe(t, n_new, ctx)
+            if notices:  # doomed-but-alive workers, per shard, right now
+                doomed = [0] * self.n_shards
+                for tn, k, until in notices:
+                    if tn <= t < until:
+                        doomed[k] += 1
+                ctx.doomed = doomed
+            if adm.salvage and t < duration_s:
+                # dead-shard drain BEFORE fresh admissions: recovered work
+                # re-enters the cluster ahead of new arrivals (§10 salvage
+                # ordering), binding to the least-pressured live shards
+                moves, salvage_buf = drain_tick(
+                    sims, self.inv_workers, t, pending=salvage_buf
+                )
+                for mv in moves:
+                    gid = admitted[mv.src][mv.src_vu]
+                    assert mv.dst_vu == len(admitted[mv.dst])
+                    admitted[mv.dst].append(gid)
+                    admit_t[mv.dst].append(mv.t)
+                salvages.extend(moves)
             if t < duration_s and ctx.waiting_n:
                 policy.admit_tick(t, ctx)
             if policy.steals and t < duration_s:
@@ -507,7 +652,7 @@ class AdmissionSimulator:
         wall_s = time.perf_counter() - t0
         return self._merge(
             sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
-            migrations, dl, arr,
+            migrations, dl, arr, salvages, salvage_buf,
         )
 
     def _pull_tick(self, t, sims, programs, waiting, admitted, admit_t, pulls) -> None:
@@ -534,15 +679,17 @@ class AdmissionSimulator:
 
     def _merge(
         self, sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
-        migrations, deadlines=None, arrivals=None,
+        migrations, deadlines=None, arrivals=None, salvages=None, salvage_buf=None,
     ) -> AdmissionRun:
         shards: List[AdmissionShard] = []
         parts: List[RecordColumns] = []
         ats, aws = [], []
+        recovery: List[float] = []
         for k, sim in enumerate(sims):
             vu_map = np.asarray(admitted[k], np.int32)
             cols = sim.record_columns
             at, aw = sim.assignment_columns
+            recovery.extend(sim.recovery_s)
             shards.append(
                 AdmissionShard(
                     index=k,
@@ -558,6 +705,12 @@ class AdmissionSimulator:
                     n_events=sim.n_events,
                     stolen_out=sim.stolen_out,
                     stolen_in=sim.stolen_in,
+                    resubmits=sim.resubmits,
+                    lost_tasks=sim.lost_tasks,
+                    salvaged_out=sim.salvaged_out,
+                    salvaged_in=sim.salvaged_in,
+                    outstanding=sim.outstanding(),
+                    alive=bool(sim.workers),
                 )
             )
             parts.append(cols.remap(worker_offset=self.worker_offsets[k]).remap_vus(vu_map))
@@ -594,4 +747,7 @@ class AdmissionSimulator:
             migrations=list(migrations),
             deadline_ms=None if deadlines is None else deadlines * 1e3,
             arrival_s=arrivals,
+            salvages=list(salvages or ()),
+            unsalvaged=sum(1 for _, sv in (salvage_buf or ()) if sv.in_flight),
+            recovery_s=np.asarray(recovery, np.float64),
         )

@@ -38,9 +38,19 @@ class RunMetrics:
     response, the flash-crowd SLO: it charges admission-queue wait as well
     as in-cluster latency, and a VU that never completed at all counts as
     missed (0.0 when the workload carries no deadline metadata — see
-    ``summarize(deadline_ms=...)``).  Dataclass
-    equality is exact float equality — the windowed-metrics parity tests
-    rely on that."""
+    ``summarize(deadline_ms=...)``).
+
+    Failure telemetry (ARCHITECTURE.md §10; all 0.0 on fault-free runs):
+    ``resubmit_rate`` is failure-retry pushes per completed request (can
+    exceed 1 under heavy churn — one request may retry several times);
+    ``lost_task_rate`` is the fraction of *resolved* requests that were
+    dropped after exhausting the retry budget, ``lost / (completed +
+    lost)``; ``recovery_p50_ms``/``recovery_p99_ms`` are percentiles of
+    first-failure-to-completion latency over requests that survived at
+    least one failure (0.0 when none did).
+
+    Dataclass equality is exact float equality — the windowed-metrics
+    parity tests rely on that."""
 
     n_requests: int
     mean_latency_ms: float
@@ -53,6 +63,10 @@ class RunMetrics:
     load_cv: float  # avg coefficient of variation of assignments/worker/second
     migrated_rate: float = 0.0
     deadline_miss_rate: float = 0.0
+    resubmit_rate: float = 0.0
+    lost_task_rate: float = 0.0
+    recovery_p50_ms: float = 0.0
+    recovery_p99_ms: float = 0.0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -136,6 +150,9 @@ def summarize(
     duration_s: float,
     deadline_ms: Optional[np.ndarray] = None,
     arrival_s: Optional[np.ndarray] = None,
+    resubmits: int = 0,
+    lost_tasks: int = 0,
+    recovery_s: Optional[Sequence[float]] = None,
 ) -> RunMetrics:
     """Aggregate §V metrics over a full record stream, in one vectorized pass.
 
@@ -156,6 +173,14 @@ def summarize(
         arrival_s: per-VU arrival times (seconds), parallel to
             ``deadline_ms``; default: everyone at t=0 (the plain-engine
             convention where VU streams start with the run).
+        resubmits: failure-retry pushes performed during the run
+            (``Simulator.resubmits``, summed across shards) — feeds
+            ``resubmit_rate``.
+        lost_tasks: requests dropped after exhausting the retry budget
+            (``Simulator.lost_tasks`` + never-re-homed salvage) — feeds
+            ``lost_task_rate``.
+        recovery_s: first-failure-to-completion latencies, seconds
+            (``Simulator.recovery_s``) — feeds the recovery percentiles.
 
     Adapter-equivalence contract: row and columnar inputs produce
     float-for-float identical results (tests/test_records.py, tolerance 0).
@@ -182,6 +207,11 @@ def summarize(
         if has_dl.any():
             miss = first_done[has_dl] - arr_ms[has_dl] > dl[has_dl]
             miss_rate = float(miss.mean())
+    rec = (
+        np.asarray(recovery_s, np.float64) * 1e3
+        if recovery_s is not None and len(recovery_s)
+        else np.zeros(0)
+    )
     return RunMetrics(
         n_requests=n,
         mean_latency_ms=float(lat.mean()),
@@ -194,6 +224,10 @@ def summarize(
         load_cv=float(cv.mean()) if cv.size else 0.0,
         migrated_rate=float(migrated.mean()),
         deadline_miss_rate=miss_rate,
+        resubmit_rate=resubmits / max(n, 1),
+        lost_task_rate=lost_tasks / (n + lost_tasks) if (n + lost_tasks) else 0.0,
+        recovery_p50_ms=float(np.percentile(rec, 50)) if rec.size else 0.0,
+        recovery_p99_ms=float(np.percentile(rec, 99)) if rec.size else 0.0,
     )
 
 

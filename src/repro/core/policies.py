@@ -97,6 +97,19 @@ class ShardState:
             (nothing admits) instead of silently wrong.
         tick_pulls: VUs this shard has already pulled in the current tick.
         t: simulated time of the tick, seconds.
+        resubmits: failure-retry pushes this shard's engine has performed
+            so far — the churn signal (0 on fault-free runs).  Cumulative,
+            so policies that want a rate difference ticks themselves.
+        lost_tasks: requests this shard has dropped after exhausting the
+            retry budget (``SimConfig.retry_budget``), cumulative.
+        doomed_workers: live workers under a preemption notice right now
+            (``AdmissionSimulator.inject_notice`` /
+            ``chaos.spot_preemption``): still serving, scheduled to die.
+            Advisory — a policy may shed load from a doomed shard early,
+            but correctness never depends on it.
+
+    The three failure fields default to 0 and are documented normatively in
+    docs/POLICIES.md §2 and docs/ARCHITECTURE.md §10.
     """
 
     index: int
@@ -106,6 +119,9 @@ class ShardState:
     warm_capacity: float
     tick_pulls: int
     t: float
+    resubmits: int = 0
+    lost_tasks: int = 0
+    doomed_workers: int = 0
 
 
 class PolicyContext:
@@ -147,6 +163,9 @@ class PolicyContext:
         self._ordered = bool(policy.orders_queue)
         self.waiting = [] if self._ordered else deque()
         self._seq = 0
+        # per-shard doomed-worker counts (preemption notices); the admission
+        # loop refreshes this each tick when a fault plan carries notices
+        self.doomed: List[int] = [0] * len(sims)
 
     # ------------------------------------------------------------- queue
     @property
@@ -210,16 +229,20 @@ class PolicyContext:
         self, k: int, t: float, pressure: Optional[float] = None,
         warm: Optional[float] = None, tick_pulls: int = 0,
     ) -> ShardState:
+        sim = self.sims[k]
         return ShardState(
             index=k,
-            pressure=self.sims[k].pressure() if pressure is None else pressure,
+            pressure=sim.pressure() if pressure is None else pressure,
             n_workers=self.worker_split[k],
             inv_workers=self.inv_workers[k],
             warm_capacity=(
-                self.sims[k].warm_capacity() if warm is None else warm
+                sim.warm_capacity() if warm is None else warm
             ),
             tick_pulls=tick_pulls,
             t=t,
+            resubmits=getattr(sim, "resubmits", 0),
+            lost_tasks=getattr(sim, "lost_tasks", 0),
+            doomed_workers=self.doomed[k],
         )
 
 

@@ -123,7 +123,12 @@ class ShardSpec:
 @dataclasses.dataclass
 class ShardResult:
     """One shard's output: columnar stream with *shard-local* ids (the exact
-    byte-identical replay of that slice) plus its throughput accounting."""
+    byte-identical replay of that slice) plus its throughput accounting.
+
+    ``resubmits``/``lost_tasks`` surface the engine's failure-retry
+    counters (docs/ARCHITECTURE.md §10): retry pushes after a worker died
+    mid-request, and requests dropped once ``SimConfig.retry_budget`` ran
+    out.  Both stay 0 on a failure-free replay."""
 
     spec: ShardSpec
     records: RecordColumns
@@ -131,6 +136,8 @@ class ShardResult:
     assign_w: np.ndarray
     n_events: int
     wall_s: float
+    resubmits: int = 0
+    lost_tasks: int = 0
 
 
 def build_simulator(spec: ShardSpec) -> Simulator:
@@ -153,6 +160,8 @@ def _result_from(spec: ShardSpec, sim: Simulator, wall_s: float) -> ShardResult:
         assign_w=aw,
         n_events=sim.n_events,
         wall_s=wall_s,
+        resubmits=sim.resubmits,
+        lost_tasks=sim.lost_tasks,
     )
 
 
@@ -194,7 +203,12 @@ class MergedRun:
 
     def summarize(self, duration_s: float) -> RunMetrics:
         return summarize(
-            self.records, (self.assign_t, self.assign_w), self.workers, duration_s
+            self.records,
+            (self.assign_t, self.assign_w),
+            self.workers,
+            duration_s,
+            resubmits=sum(r.resubmits for r in self.shards),
+            lost_tasks=sum(r.lost_tasks for r in self.shards),
         )
 
 

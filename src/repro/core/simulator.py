@@ -91,7 +91,20 @@ class SimConfig:
         overhead_ms: scheduler decision overhead added to every request's
             completion time, milliseconds (the §V overhead experiment).
         retry_delay_s: control-plane resubmit delay after a request is lost
-            to a worker failure, seconds.
+            to a worker failure, seconds — the *base* of the backoff
+            schedule: attempt ``i`` (1-based) retries after
+            ``min(retry_delay_s * retry_backoff**(i-1), retry_max_delay_s)``.
+            Attempt 1 is always exactly ``retry_delay_s``, which is what
+            keeps single-retry runs byte-identical to the flat-delay seed
+            engine.
+        retry_backoff: multiplicative backoff factor per retry attempt
+            (>= 1; 1.0 reproduces the seed engine's flat delay exactly).
+        retry_max_delay_s: cap on the backoff delay, seconds.
+        retry_budget: per-task retry attempts before the request is
+            *dropped* and counted in ``Simulator.lost_tasks`` /
+            ``RunMetrics.lost_task_rate`` (its closed-loop VU halts).
+            ``None`` retries forever — the seed engine's behavior, where a
+            task on a fully-dead cluster loops until the deadline.
     """
 
     n_workers: int = 5
@@ -104,12 +117,31 @@ class SimConfig:
     sweep_every_s: float = 1.0
     exec_sigma: float = 0.25
     overhead_ms: float = 0.0  # scheduler decision overhead added to latency
-    retry_delay_s: float = 0.05  # resubmit delay after worker failure
+    retry_delay_s: float = 0.05  # base resubmit delay after worker failure
+    retry_backoff: float = 2.0  # exponential backoff factor per attempt
+    retry_max_delay_s: float = 1.0  # backoff cap
+    retry_budget: Optional[int] = 8  # attempts before the task counts lost
+
+    def __post_init__(self):
+        if self.retry_delay_s <= 0:
+            raise ValueError(f"retry_delay_s must be > 0, got {self.retry_delay_s}")
+        if self.retry_backoff < 1.0:
+            raise ValueError(f"retry_backoff must be >= 1, got {self.retry_backoff}")
+        if self.retry_max_delay_s < self.retry_delay_s:
+            raise ValueError(
+                f"retry_max_delay_s {self.retry_max_delay_s} must be >= "
+                f"retry_delay_s {self.retry_delay_s}"
+            )
+        if self.retry_budget is not None and self.retry_budget < 1:
+            raise ValueError(
+                f"retry_budget must be >= 1 (or None for unlimited), "
+                f"got {self.retry_budget}"
+            )
 
 
 # RequestRecord lives in core.records now; re-exported here for the legacy
 # import path (``from repro.core.simulator import RequestRecord``).
-__all__ = ["RequestRecord", "SimConfig", "Simulator", "StolenTask"]
+__all__ = ["RequestRecord", "SalvagedVU", "SimConfig", "Simulator", "StolenTask"]
 
 
 # integer event kinds; the *push order* (and with it the tie-breaking
@@ -129,7 +161,7 @@ class _Instance:
 class _Task:
     __slots__ = (
         "func", "vu", "ev_idx", "t_submit", "work_s", "remaining_s", "cold",
-        "worker", "migrated",
+        "worker", "migrated", "attempts", "fail_t",
     )
 
     def __init__(self, func: int, vu: int, ev_idx: int, t_submit: float):
@@ -142,6 +174,8 @@ class _Task:
         self.cold = False
         self.worker = -1
         self.migrated = False  # re-injected by cross-shard work stealing
+        self.attempts = 0  # failure retries so far (backoff exponent)
+        self.fail_t = -1.0  # first time a failure hit this task (<0: never)
 
 
 class _Worker:
@@ -280,6 +314,9 @@ class StolenTask:
       loop: the VU resumes its program on the destination at ``next_pos``.
     * ``src_vu`` — the victim-shard-local VU id at steal time (coordinator
       bookkeeping: maps to the global id through the admission table).
+    * ``attempts``/``fail_t`` — the task's failure-retry history (backoff
+      exponent and first-failure time), carried so a salvaged task's
+      recovery latency is charged on the shard that finally completes it.
     """
 
     func: int
@@ -293,6 +330,35 @@ class StolenTask:
     prog_sleeps: List[float]
     next_pos: int
     src_vu: int
+    attempts: int = 0
+    fail_t: float = -1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SalvagedVU:
+    """One live VU exported off a *dead* shard by
+    :meth:`Simulator.salvage_queued` — the unit of dead-shard drain
+    (``core.stealing.drain_tick``).
+
+    ``stolen`` reuses the :class:`StolenTask` migration identity (program,
+    resume position, bit-exact service-fluctuation identity), so re-homing a
+    salvaged VU replays the same draws as a work-stealing migration would.
+    ``in_flight`` distinguishes the two VU states a dead shard can hold:
+
+    * ``True`` — the VU's single outstanding request was waiting for retry
+      (a ``_RESUBMIT`` event); the receiver re-dispatches it immediately and
+      the completion is flagged ``migrated``.
+    * ``False`` — the VU was mid-think (a scheduled ``_SUBMIT``); the
+      receiver resumes its program at ``resume_t`` (clamped to its clock),
+      and ``stolen.func``/``ev_idx`` echo the *next* program position.
+
+    ``resume_t`` is the dead shard's scheduled event time for the VU (the
+    retry time or the end-of-think submit time).
+    """
+
+    stolen: StolenTask
+    in_flight: bool
+    resume_t: float
 
 
 class Simulator:
@@ -351,6 +417,12 @@ class Simulator:
         self.stolen_out = 0
         self.stolen_in = 0
         self._fluct_identity: Optional[List[Tuple[int, int]]] = None
+        # failure telemetry (core.chaos / RunMetrics failure columns):
+        self.resubmits = 0  # retry pushes after a failure hit a task
+        self.lost_tasks = 0  # tasks dropped after exhausting retry_budget
+        self.salvaged_out = 0  # VUs exported off this (dead) shard
+        self.salvaged_in = 0  # salvaged VUs re-homed onto this shard
+        self.recovery_s: List[float] = []  # first-failure -> completion, s
         # pre-resolved per-function metadata (hot-loop lookups)
         self._fnames = [f.name for f in self.funcs]
         self._fmem = [f.mem_mb for f in self.funcs]
@@ -390,9 +462,30 @@ class Simulator:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
     def inject_failure(self, t: float, worker: int) -> None:
+        """Schedule worker ``worker`` to fail at time ``t``.
+
+        ``worker`` must be a nonnegative id that exists by time ``t`` —
+        either in the initial ``[0, n_workers)`` range or scheduled via
+        :meth:`inject_worker`; :meth:`begin` validates the full schedule
+        (unknown ids and times past the run deadline raise ``ValueError``
+        instead of silently never firing)."""
+        if worker < 0:
+            raise ValueError(f"inject_failure: worker id must be >= 0, got {worker}")
+        if t < 0:
+            raise ValueError(f"inject_failure: t must be >= 0, got {t}")
         self._failures.append((t, worker))
 
     def inject_worker(self, t: float, worker: int) -> None:
+        """Schedule a worker with id ``worker`` to join at time ``t``.
+
+        New ids beyond the initial range are the elastic scale-up path;
+        re-adding a previously failed id revives it.  :meth:`begin`
+        validates ``t`` against the run deadline (see
+        :meth:`inject_failure`)."""
+        if worker < 0:
+            raise ValueError(f"inject_worker: worker id must be >= 0, got {worker}")
+        if t < 0:
+            raise ValueError(f"inject_worker: t must be >= 0, got {t}")
         self._additions.append((t, worker))
 
     # ------------------------------------------------------- fluctuations
@@ -554,6 +647,29 @@ class Simulator:
         self._fluct_identity = None  # fresh run: all rows native until a steal
         self._fluct = self._fluct_entry(n_vus)
         self._overhead_s = cfg.overhead_ms / 1e3
+
+        # injection-schedule validation: an event past the deadline or a
+        # failure of a worker that never exists would silently no-op — loud
+        # ValueError instead (the chaos tier builds on these hooks)
+        known = set(range(cfg.n_workers)) | {w for _, w in self._additions}
+        for t, w in self._failures:
+            if w not in known:
+                raise ValueError(
+                    f"inject_failure({t}, {w}): worker {w} is neither in the "
+                    f"initial range [0, {cfg.n_workers}) nor scheduled by "
+                    "inject_worker"
+                )
+            if t > self._deadline:
+                raise ValueError(
+                    f"inject_failure({t}, {w}): t is past the run deadline "
+                    f"{self._deadline} and would never fire"
+                )
+        for t, w in self._additions:
+            if t > self._deadline:
+                raise ValueError(
+                    f"inject_worker({t}, {w}): t is past the run deadline "
+                    f"{self._deadline} and would never fire"
+                )
 
         for vu in range(n_vus):
             self._push(t_start, _SUBMIT, (vu,))
@@ -770,10 +886,88 @@ class Simulator:
                     prog_sleeps=self._prog_sleeps[vu],
                     next_pos=self._vu_pos[vu],
                     src_vu=vu,
+                    attempts=task.attempts,
+                    fail_t=task.fail_t,
                 )
             )
             self._vu_pos[vu] = len(self._prog_funcs[vu])  # retire the VU here
             self.stolen_out += 1
+        return out
+
+    def _export_vu(self, vu: int, func: int, ev_idx: int, t_submit: float,
+                   attempts: int = 0, fail_t: float = -1.0) -> StolenTask:
+        """Package VU ``vu``'s whole future as a :class:`StolenTask` and
+        retire it locally (shared by :meth:`steal_queued` — inlined there for
+        the hot path — and :meth:`salvage_queued`).  Caller supplies the
+        in-flight request identity, or the *next* program position for a
+        mid-think VU."""
+        self._flush_fluct()
+        oseed, ovu = self._fluct_row_identity(vu)
+        stolen = StolenTask(
+            func=func,
+            ev_idx=ev_idx,
+            t_submit=t_submit,
+            origin_seed=oseed,
+            origin_vu=ovu,
+            fluct_row=list(self._fluct["rows"][vu]),
+            program=self._programs[vu],
+            prog_funcs=self._prog_funcs[vu],
+            prog_sleeps=self._prog_sleeps[vu],
+            next_pos=self._vu_pos[vu],
+            src_vu=vu,
+            attempts=attempts,
+            fail_t=fail_t,
+        )
+        self._vu_pos[vu] = len(self._prog_funcs[vu])  # retire the VU here
+        return stolen
+
+    def salvage_queued(self) -> List[SalvagedVU]:
+        """Export every still-live VU of a DEAD shard (no live workers) —
+        the dead-shard drain hook (``core.stealing.drain_tick``).
+
+        When the last worker dies, every VU is in one of two states, both
+        parked on the event heap: its single outstanding request waits for a
+        backoff retry (``_RESUBMIT``), or it is mid-think with a scheduled
+        next submit (``_SUBMIT``).  Both are pure control-plane state — no
+        sandbox memory, no partial work — so each VU's whole future can
+        migrate exactly like a stolen pending task (same
+        :class:`StolenTask` identity, bit-exact service draws).  The
+        exported events are removed from the heap (exactly-once: the task
+        re-runs on the receiver or nowhere), VUs are retired locally, and
+        sweep/stale events stay behind.  Raises on a shard that still has
+        live workers — salvage is the *dead*-shard path; live imbalance is
+        work stealing's job.
+        """
+        if self.workers:
+            raise ValueError(
+                "salvage_queued requires a dead shard (live workers: "
+                f"{sorted(self.workers)}); use steal_queued for live rebalance"
+            )
+        out: List[SalvagedVU] = []
+        keep: List[Tuple[float, int, int, tuple]] = []
+        for entry in self._heap:
+            t, _, kind, payload = entry
+            if kind == _RESUBMIT:
+                task: _Task = payload[0]
+                stolen = self._export_vu(
+                    task.vu, task.func, task.ev_idx, task.t_submit,
+                    attempts=task.attempts, fail_t=task.fail_t,
+                )
+                out.append(SalvagedVU(stolen=stolen, in_flight=True, resume_t=t))
+            elif kind == _SUBMIT:
+                vu = payload[0]
+                pos = self._vu_pos[vu]
+                funcs = self._prog_funcs[vu]
+                if pos >= len(funcs):
+                    continue  # exhausted program: drop the stale submit
+                stolen = self._export_vu(vu, funcs[pos], pos, t)
+                out.append(SalvagedVU(stolen=stolen, in_flight=False, resume_t=t))
+            else:
+                keep.append(entry)
+        if len(keep) != len(self._heap):
+            self._heap = keep
+            heapq.heapify(self._heap)
+        self.salvaged_out += len(out)
         return out
 
     def receive_task(self, stolen: StolenTask, t: Optional[float] = None) -> int:
@@ -791,6 +985,21 @@ class Simulator:
         t = self.t if t is None else float(t)
         if t < self.t:
             raise ValueError(f"cannot receive in the past: t={t} < now={self.t}")
+        vu = self._register_foreign(stolen)
+        task = _Task(stolen.func, vu, stolen.ev_idx, stolen.t_submit)
+        task.migrated = True
+        task.attempts = stolen.attempts
+        task.fail_t = stolen.fail_t
+        self._push(t, _RESUBMIT, (task,))
+        self.stolen_in += 1
+        return vu
+
+    def _register_foreign(self, stolen: StolenTask) -> int:
+        """Register a migrated VU as a fresh local id: program resumed at
+        ``next_pos``, fluctuation row bound to the origin identity
+        ``(origin_seed, origin_vu)`` so every service draw replays
+        bit-exactly.  Shared by :meth:`receive_task` (work stealing) and
+        :meth:`receive_salvaged` (dead-shard drain)."""
         vu = len(self._prog_funcs)
         self._programs.append(stolen.program)
         self._prog_funcs.append(stolen.prog_funcs)
@@ -819,11 +1028,50 @@ class Simulator:
             rows[vu] = row
             self._fluct_identity[vu] = (stolen.origin_seed, stolen.origin_vu)
             entry["pending"].discard(vu)
-        task = _Task(stolen.func, vu, stolen.ev_idx, stolen.t_submit)
-        task.migrated = True
-        self._push(t, _RESUBMIT, (task,))
-        self.stolen_in += 1
         return vu
+
+    def receive_salvaged(self, sal: SalvagedVU, t: Optional[float] = None) -> int:
+        """Re-home a VU salvaged off a dead shard (the drain's destination
+        hook; mirror of :meth:`receive_task`).
+
+        An in-flight VU's lost request re-dispatches immediately at ``t`` —
+        salvage *is* its recovery, so it does not also serve out the dead
+        shard's remaining backoff delay — keeping its original submit time
+        (recorded latency charges the whole outage) and its retry history;
+        its completion is flagged ``migrated``.  A mid-think VU resumes its
+        program at ``max(resume_t, t)``: thinking continued while the shard
+        was dark, only dispatch needs a live home.  Returns the new local VU
+        id for the admission table.
+        """
+        t = self.t if t is None else float(t)
+        if t < self.t:
+            raise ValueError(f"cannot receive in the past: t={t} < now={self.t}")
+        stolen = sal.stolen
+        vu = self._register_foreign(stolen)
+        if sal.in_flight:
+            task = _Task(stolen.func, vu, stolen.ev_idx, stolen.t_submit)
+            task.migrated = True
+            task.attempts = stolen.attempts
+            task.fail_t = stolen.fail_t
+            self._push(t, _RESUBMIT, (task,))
+        else:
+            self._push(max(sal.resume_t, t), _SUBMIT, (vu,))
+        self.salvaged_in += 1
+        return vu
+
+    def outstanding(self) -> int:
+        """Submitted-but-unresolved requests right now: running + pending on
+        live workers, plus retry re-submissions waiting on the heap.  On a
+        dead shard after :meth:`salvage_queued` this is 0 — the acceptance
+        signal that the drain strands nothing (mid-think VUs have no
+        *submitted* request, so they don't count here)."""
+        n = 0
+        for entry in self._heap:
+            if entry[2] == _RESUBMIT:
+                n += 1
+        for w in self.workers.values():
+            n += len(w.running) + len(w.pending)
+        return n
 
     # ------------------------------------------------------------ handlers
     def _ev_submit(self, vu: int) -> None:
@@ -834,14 +1082,47 @@ class Simulator:
         self._vu_pos[vu] = pos + 1
         self._dispatch(_Task(funcs[pos], vu, pos, self.t))
 
+    def _retry_delay(self, attempts: int) -> float:
+        """Backoff schedule: attempt ``i`` (1-based) waits
+        ``min(retry_delay_s * retry_backoff**(i-1), retry_max_delay_s)``.
+        Attempt 1 is exactly ``retry_delay_s`` — the seed engine's flat
+        delay — which is what keeps single-retry runs byte-identical."""
+        cfg = self.cfg
+        if attempts <= 1:
+            return cfg.retry_delay_s
+        d = cfg.retry_delay_s * cfg.retry_backoff ** (attempts - 1)
+        return d if d < cfg.retry_max_delay_s else cfg.retry_max_delay_s
+
+    def _retry_or_lose(self, task: _Task) -> None:
+        """A failure hit ``task``: resubmit with backoff, or — once the
+        per-task ``retry_budget`` is exhausted — drop it as lost.  A lost
+        task's closed-loop VU halts (it never completes, so it never thinks
+        and never submits again); ``lost_tasks`` counts it and
+        ``RunMetrics.lost_task_rate`` reports it."""
+        task.attempts += 1
+        if task.fail_t < 0.0:
+            task.fail_t = self.t
+        budget = self.cfg.retry_budget
+        if budget is not None and task.attempts > budget:
+            self.lost_tasks += 1
+            return
+        self.resubmits += 1
+        self._push(self.t + self._retry_delay(task.attempts), _RESUBMIT, (task,))
+
     def _dispatch(self, task: _Task) -> None:
         fname = self._fnames[task.func]
+        if not self.workers:
+            # fully-dead cluster: nobody to schedule onto.  Backoff-retry
+            # (the admission tier's drain salvages the task off this shard;
+            # standalone, the retry_budget bounds the loop).
+            self._retry_or_lose(task)
+            return
         w = self.sched.schedule(fname)
         worker = self.workers.get(w)
         if worker is None or not worker.alive:
             # scheduler view raced with a failure; retry shortly
             self.sched.on_cancel(w, fname)
-            self._push(self.t + self.cfg.retry_delay_s, _RESUBMIT, (task,))
+            self._retry_or_lose(task)
             return
         task.worker = w
         self._asg_t.append(self.t)
@@ -927,6 +1208,10 @@ class Simulator:
         worker.idle_mem_mb += mem
         self.sched.on_finish(worker.wid, self._fnames[func])
         t_done = t + self._overhead_s
+        if task.fail_t >= 0.0:
+            # the request survived >=1 failure: recovery latency is first
+            # failure -> completion (RunMetrics recovery percentiles)
+            self.recovery_s.append(t_done - task.fail_t)
         self._rec_append(
             task.t_submit, t_done, func, worker.wid, task.cold, task.vu, task.migrated
         )
@@ -985,11 +1270,14 @@ class Simulator:
         worker.advance(self.t)
         worker.alive = False
         self.sched.on_worker_removed(wid)
-        # running + pending tasks are lost; control plane retries them
+        # running + pending tasks are lost; control plane retries them with
+        # capped exponential backoff until the per-task budget runs out
         for task in worker.running + worker.pending:
             fresh = _Task(task.func, task.vu, task.ev_idx, task.t_submit)
             fresh.migrated = task.migrated  # a retried stolen task stays stolen
-            self._push(self.t + self.cfg.retry_delay_s, _RESUBMIT, (fresh,))
+            fresh.attempts = task.attempts
+            fresh.fail_t = task.fail_t
+            self._retry_or_lose(fresh)
         worker.running, worker.pending, worker.idle = [], [], {}
         worker.busy_mem_mb = worker.idle_mem_mb = 0.0
         del self.workers[wid]

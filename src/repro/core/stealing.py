@@ -39,11 +39,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
-from .simulator import Simulator, StolenTask
+from .simulator import SalvagedVU, Simulator, StolenTask
 
-__all__ = ["Migration", "steal_tick"]
+__all__ = ["Migration", "Salvage", "drain_tick", "steal_tick"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,3 +132,88 @@ def steal_tick(
         heapq.heapreplace(victims, (neg_pv + inv_workers[v], v))
         heapq.heapreplace(thieves, (pt + inv_workers[th], th))
     return moves
+
+
+@dataclasses.dataclass(frozen=True)
+class Salvage:
+    """One VU re-homed off a dead shard (telemetry row on ``AdmissionRun``).
+
+    Shape-compatible with :class:`Migration` (same local-id semantics, same
+    admission-table resolution of ``src_vu``), plus ``in_flight``: ``True``
+    when the salvaged VU carried a lost request that re-dispatches on the
+    destination (its completion is flagged ``migrated``), ``False`` for a
+    mid-think VU that merely resumes its program there.  ``func``/``ev_idx``
+    identify the in-flight request, or the VU's next program position.
+    """
+
+    t: float
+    src: int
+    dst: int
+    src_vu: int
+    dst_vu: int
+    func: int
+    ev_idx: int
+    in_flight: bool
+
+
+def drain_tick(
+    sims: Sequence[Simulator],
+    inv_workers: Sequence[float],
+    t: float,
+    pending: Optional[List[Tuple[int, SalvagedVU]]] = None,
+) -> Tuple[List[Salvage], List[Tuple[int, SalvagedVU]]]:
+    """One dead-shard drain round: salvage every fully-dead shard's live VUs
+    onto live shards.  Returns ``(moves, leftovers)``.
+
+    The recovery half of the §10 failure contract (docs/ARCHITECTURE.md):
+    when a shard's last worker dies, its queued work must re-enter the
+    global pool instead of stranding.  Each dead shard (no live workers —
+    pressure ``inf``) is drained via ``Simulator.salvage_queued``; exports
+    are placed on live shards through the same pressure-keyed min-heap and
+    ``1/n_workers`` effective-pressure accounting as admission pulls and
+    steals.  Unlike stealing there is no watermark gate: salvaged work is
+    *survival* traffic and must land somewhere even if every live shard is
+    above the pull watermark.
+
+    ``pending`` carries exports buffered from earlier ticks when the whole
+    cluster was dark; they are placed first (oldest outage first).  When no
+    live shard exists this tick, all exports come back as ``leftovers`` for
+    the caller to retry after a revival (``inject_worker``) — exactly-once
+    either way: a salvaged VU is re-homed once or still owned by the buffer.
+
+    Determinism: dead shards drain in index order, ``salvage_queued``'s
+    export order is the victim heap order, and placement is the
+    ``(pressure, index)`` total order — a pure function of the co-run state.
+    """
+    exports: List[Tuple[int, SalvagedVU]] = list(pending or ())
+    for k, sim in enumerate(sims):
+        if not sim.workers:
+            for sv in sim.salvage_queued():
+                exports.append((k, sv))
+    if not exports:
+        return [], []
+    thieves = [(sim.pressure(), k) for k, sim in enumerate(sims) if sim.workers]
+    if not thieves:
+        return [], exports  # cluster fully dark: buffer until a revival
+    heapq.heapify(thieves)
+    moves: List[Salvage] = []
+    for src, sv in exports:
+        p, th = thieves[0]
+        # never before the receiver's clock (the steal_tick rule: the victim
+        # is already mutated, so a rejected receive would lose the task)
+        when = max(t, sims[th].t)
+        dst_vu = sims[th].receive_salvaged(sv, t=when)
+        moves.append(
+            Salvage(
+                t=when,
+                src=src,
+                dst=th,
+                src_vu=sv.stolen.src_vu,
+                dst_vu=dst_vu,
+                func=sv.stolen.func,
+                ev_idx=sv.stolen.ev_idx,
+                in_flight=sv.in_flight,
+            )
+        )
+        heapq.heapreplace(thieves, (p + inv_workers[th], th))
+    return moves, []

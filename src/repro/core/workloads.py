@@ -66,12 +66,18 @@ class Scenario:
     are per-VU *relative* latency SLOs (seconds; ``None`` when the scenario
     carries no deadline semantics).  Feed it to the admission tier with
     ``adm.run(scn.n_vus, duration_s, **scn.run_kwargs())``.
+
+    ``faults`` optionally attaches a :class:`~repro.core.chaos.FaultPlan`
+    (injected failure/recovery schedule) so a chaos scenario travels as one
+    replayable bundle; ``run_kwargs`` forwards it only when set, keeping
+    plain scenarios byte-identical to their pre-chaos form.
     """
 
     name: str
     programs: List[VUProgram]
     arrivals: np.ndarray
     deadlines: Optional[np.ndarray] = None
+    faults: Optional[object] = None  # chaos.FaultPlan; object to avoid a cycle
 
     @property
     def n_vus(self) -> int:
@@ -79,9 +85,12 @@ class Scenario:
 
     def run_kwargs(self) -> dict:
         """Keyword arguments for ``AdmissionSimulator.run``."""
-        return dict(
+        kw = dict(
             programs=self.programs, arrivals=self.arrivals, deadlines=self.deadlines
         )
+        if self.faults is not None:
+            kw["faults"] = self.faults
+        return kw
 
 
 def _weights(funcs: Sequence[FunctionSpec]) -> np.ndarray:

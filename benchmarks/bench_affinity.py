@@ -1,0 +1,125 @@
+"""Warm-locality affinity routing: cold-start rate vs the pull baseline.
+
+The §11 acceptance benchmark (docs/ARCHITECTURE.md): the ``affinity``
+admission policy routes each VU toward the shard whose per-function warm-set
+digest (``Simulator.warm_digest``) says its program can start warm, scoring
+shards by expected warm-hit probability against effective pressure.  The
+claim to prove is the KV-router analog of Hiku's pull principle: on
+locality-skewed traffic, digest-aware placement cuts the cold-start rate
+below pressure-only placement *without* giving back tail latency.
+
+Protocol — the 4-shard admission matrix on two locality-skewed scenarios:
+
+* ``heavy_tail`` — 30% elephant VUs hammer the heavy warm-cost quartile:
+  strong per-VU locality the digest can exploit;
+* ``diurnal`` — sine-modulated arrivals, Azure-weighted uniform profiles:
+  weak profile skew, so most of the win must come from first-call warmth.
+
+Columns: ``pull`` (pressure only), ``cost`` (pressure x warm headroom),
+``pull+steal`` (post-admission rebalancing), ``affinity`` (digest routing),
+``affinity+steal`` (digest routing + warm-locality stealing).  The full
+protocol aggregates over :data:`FULL_SEEDS`; ``--quick`` is one seed on the
+2-shard matrix for CI smoke.
+
+Acceptance rows (pinned by .github/workflows/ci.yml's grep and eyeballed in
+benchmarks/results/): ``affinity/<scenario>/affinity_vs_pull`` must show
+``cold_affinity < cold_pull`` with ``p99_affinity <= ~p99_pull`` on both
+scenarios.
+"""
+
+from __future__ import annotations
+
+import time
+import warnings
+
+FULL = dict(n_shards=4, n_workers=32, n_vus=96, duration_s=40.0, mem_pool_mb=1024.0)
+QUICK = dict(n_shards=2, n_workers=8, n_vus=32, duration_s=14.0, mem_pool_mb=1024.0)
+
+FULL_SEEDS = (0, 1, 2)
+QUICK_SEEDS = (0,)
+
+SCENARIOS = ("heavy_tail", "diurnal")
+COLUMNS = ("pull", "cost", "pull+steal", "affinity", "affinity+steal")
+
+
+def run_cell(policy: str, scenario_name: str, p: dict, seed: int = 0):
+    """One (policy, scenario, seed) cell -> (run, metrics)."""
+    from repro.core import SimConfig, make_functions
+    from repro.core.admission import AdmissionConfig, AdmissionSimulator
+    from repro.core.workloads import make_scenario
+
+    # fixed function population, seeded traffic + engines: the seed axis
+    # varies arrivals/programs/service draws, not the workload's shape
+    funcs = make_functions(seed=0)
+    scn = make_scenario(scenario_name, funcs, p["n_vus"], p["duration_s"], seed=seed)
+    adm = AdmissionSimulator(
+        p["n_shards"], p["n_workers"], scheduler="hiku",
+        cfg=SimConfig(mem_pool_mb=p["mem_pool_mb"]), seed=seed,
+        admission=AdmissionConfig(policy=policy, steal_watermark=1.25),
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        r = adm.run(scn.n_vus, p["duration_s"], **scn.run_kwargs())
+    return r, r.summarize(p["duration_s"])
+
+
+def _mean(xs):
+    return sum(xs) / len(xs)
+
+
+def run(quick: bool = False):
+    from .common import save_json
+
+    p = QUICK if quick else FULL
+    seeds = QUICK_SEEDS if quick else FULL_SEEDS
+    rows = []
+    payload = {"params": dict(p), "seeds": list(seeds), "columns": list(COLUMNS)}
+    for scn_name in SCENARIOS:
+        agg = {}
+        cell_json = {}
+        for col in COLUMNS:
+            t0 = time.perf_counter()
+            ms = [run_cell(col, scn_name, p, seed=s)[1] for s in seeds]
+            wall = time.perf_counter() - t0
+            n_req = sum(m.n_requests for m in ms)
+            cold = _mean([m.cold_rate for m in ms])
+            p99 = _mean([m.p99_ms for m in ms])
+            mean_ms = _mean([m.mean_latency_ms for m in ms])
+            agg[col] = (cold, p99)
+            cell_json[col.replace("+", "_")] = {
+                "cold_rate": cold,
+                "p99_ms": p99,
+                "mean_ms": mean_ms,
+                "cold_rate_per_seed": [m.cold_rate for m in ms],
+                "p99_ms_per_seed": [m.p99_ms for m in ms],
+                "n_requests": n_req,
+            }
+            rows.append(
+                (
+                    f"affinity/{scn_name}/{col}",
+                    wall / max(n_req, 1) * 1e6,
+                    f"cold_rate={cold:.4f};p99_ms={p99:.0f};"
+                    f"mean_ms={mean_ms:.0f};seeds={len(seeds)};requests={n_req}",
+                )
+            )
+        payload[scn_name] = cell_json
+        # the §11 acceptance row: digest routing vs pressure-only placement
+        cold_pull, p99_pull = agg["pull"]
+        cold_aff, p99_aff = agg["affinity"]
+        rows.append(
+            (
+                f"affinity/{scn_name}/affinity_vs_pull",
+                0.0,
+                f"cold_pull={cold_pull:.4f};cold_affinity={cold_aff:.4f};"
+                f"cold_delta={cold_aff - cold_pull:+.4f};"
+                f"p99_pull={p99_pull:.0f};p99_affinity={p99_aff:.0f};"
+                f"p99_delta_ms={p99_aff - p99_pull:+.0f}",
+            )
+        )
+    save_json("affinity", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

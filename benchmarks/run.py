@@ -30,6 +30,7 @@ def main(argv=None) -> None:
 
     from . import (
         bench_admission,
+        bench_affinity,
         bench_chaos,
         bench_coldstart,
         bench_concurrency,
@@ -65,6 +66,7 @@ def main(argv=None) -> None:
         "sim_speed": bench_sim_speed,
         "shard_scale": bench_shard_scale,
         "admission": bench_admission,
+        "affinity": bench_affinity,
         "stealing": bench_stealing,
         "policies": bench_policies,
         "chaos": bench_chaos,

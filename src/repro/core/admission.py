@@ -40,9 +40,9 @@ column and the run's ``migrations`` telemetry.
 policy decisions, dispatched through the pluggable registry in
 ``core.policies``: ``AdmissionConfig.policy`` names any registered
 ``AdmissionPolicy`` (``available_policies()`` lists them — ``pull``,
-``round_robin``, ``pull+steal``, ``deadline``, ``cost``, ``predictive``
-ship built in), and the three original behaviors run byte-identically
-through the same dispatch.  ``core.workloads`` generates the bursty
+``round_robin``, ``pull+steal``, ``deadline``, ``cost``, ``predictive``,
+``affinity``, ``affinity+steal`` ship built in), and the three original
+behaviors run byte-identically through the same dispatch.  ``core.workloads`` generates the bursty
 scenario suite (flash crowds, diurnal load, ON/OFF arrivals, heavy-tailed
 service mixes) the policies are benchmarked on
 (``benchmarks/bench_policies.py``).
@@ -114,10 +114,12 @@ class AdmissionConfig:
             plus per-tick cross-shard work stealing — see ``core.stealing``),
             ``"round_robin"`` (cyclic binding on arrival — the
             arrival-capable static baseline), ``"deadline"`` (EDF-ordered
-            global queue), ``"cost"`` (warm-capacity-scaled pull threshold)
-            and ``"predictive"`` (EWMA arrival-forecast-modulated
-            watermark).  Unknown names raise at config construction with
-            the available list.
+            global queue), ``"cost"`` (warm-capacity-scaled pull threshold),
+            ``"predictive"`` (EWMA arrival-forecast-modulated watermark)
+            and ``"affinity"``/``"affinity+steal"`` (warm-locality routing
+            against the per-function warm-set digest; the ``+steal``
+            variant also steals warm-first).  Unknown names raise at config
+            construction with the available list.
         steal_watermark: pressure above which a shard's queued tasks may be
             stolen (stealing policies only).  Must be >= ``watermark`` so a
             shard can never be victim and thief in the same tick; the band
@@ -568,8 +570,12 @@ class AdmissionSimulator:
             sims[k].inject_worker(ft, local)
         notices = []  # (t_notice, shard, t_kill), doomed-worker signal
         for ft, gw, until in self._notices:
-            k, _ = self._locate(gw, "inject_notice")
+            k, local = self._locate(gw, "inject_notice")
             notices.append((ft, k, until))
+            # forward to the owning engine too: inside the window the worker
+            # drops out of warm_capacity()/warm_digest() (doomed capacity is
+            # not headroom — the §11 bugfix), with zero event-loop effect
+            sims[k].inject_notice(ft, local, until)
         for sim in sims:
             sim.begin(n_vus=0, duration_s=duration_s, programs=[])
 
@@ -634,6 +640,7 @@ class AdmissionSimulator:
                     inv_workers=self.inv_workers,
                     t=t,
                     max_moves=adm.steal_batch,
+                    prefer_warm=policy.steal_affinity,
                 )
                 for mv in moves:
                     gid = admitted[mv.src][mv.src_vu]

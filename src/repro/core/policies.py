@@ -35,6 +35,12 @@ stealing suites pass unmodified), and three new policies ship against it:
   Cold Starts with Model Predictive Control*): an EWMA forecast of the
   arrival rate modulates the pull watermark, so shards pre-drain the queue
   ahead of a building burst instead of reacting one tick late.
+* ``affinity`` / ``affinity+steal`` — warm-locality routing: shards are
+  scored by expected warm-hit probability × pressure against their
+  per-function warm-set digest (``Simulator.warm_digest`` via
+  ``ShardState.warm_digest``), the KV-router analog; the ``+steal`` variant
+  also runs the steal round warm-locality-aware (thieves prefer tasks they
+  can serve warm).
 
 Determinism contract (normative; docs/POLICIES.md is the author guide):
 policy decisions must be a pure function of the visible state — the
@@ -48,11 +54,14 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import types
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple, Type
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Type
 
 __all__ = [
     "AdmissionPolicy",
+    "AffinityPolicy",
+    "AffinityStealPolicy",
     "CostPolicy",
     "DeadlinePolicy",
     "PolicyContext",
@@ -107,6 +116,15 @@ class ShardState:
             ``chaos.spot_preemption``): still serving, scheduled to die.
             Advisory — a policy may shed load from a doomed shard early,
             but correctness never depends on it.
+        warm_digest: the shard's per-function warm-set digest — a read-only
+            ``{func_index: warm_instance_count}`` mapping over live,
+            un-doomed workers (``Simulator.warm_digest``; functions with no
+            warm instance are absent).  Populated by the default
+            ``admit_tick`` only when the policy sets ``uses_warm_digest =
+            True``; otherwise ``None``, so an undeclared read fails loudly
+            (``AttributeError``/``TypeError``) instead of silently scoring
+            everything cold.  The digest contract is normative in
+            docs/ARCHITECTURE.md §11.
 
     The three failure fields default to 0 and are documented normatively in
     docs/POLICIES.md §2 and docs/ARCHITECTURE.md §10.
@@ -122,6 +140,7 @@ class ShardState:
     resubmits: int = 0
     lost_tasks: int = 0
     doomed_workers: int = 0
+    warm_digest: Optional[Mapping[int, int]] = None
 
 
 class PolicyContext:
@@ -166,6 +185,8 @@ class PolicyContext:
         # per-shard doomed-worker counts (preemption notices); the admission
         # loop refreshes this each tick when a fault plan carries notices
         self.doomed: List[int] = [0] * len(sims)
+        # per-VU function-frequency profiles, computed lazily (func_profile)
+        self._profiles: Dict[int, Tuple[Tuple[int, float], ...]] = {}
 
     # ------------------------------------------------------------- queue
     @property
@@ -208,6 +229,31 @@ class PolicyContext:
             return float("inf")
         return float(self._deadlines[gid])
 
+    def func_profile(self, gid: int) -> Tuple[Tuple[int, float], ...]:
+        """VU ``gid``'s function-call mix as ``((func_index, frequency),
+        ...)`` sorted by function index, frequencies summing to 1.0.
+
+        The locality key affinity scoring matches against a shard's
+        ``warm_digest``.  Pure function of the workload (the VU's program),
+        cached per VU, so repeated reads inside a tick are O(1); an empty
+        program yields ``()``.
+        """
+        prof = self._profiles.get(gid)
+        if prof is None:
+            fi = self.programs[gid].func_idx
+            n = len(fi)
+            if n == 0:
+                prof = ()
+            else:
+                counts: Dict[int, int] = {}
+                for f in fi.tolist():
+                    counts[f] = counts.get(f, 0) + 1
+                prof = tuple(
+                    (f, c / n) for f, c in sorted(counts.items())
+                )
+            self._profiles[gid] = prof
+        return prof
+
     # ------------------------------------------------------------- binding
     def admit_next(self, k: int, t: float) -> int:
         """Bind the queue head to shard ``k`` at time ``t``; returns the
@@ -228,6 +274,7 @@ class PolicyContext:
     def shard_state(
         self, k: int, t: float, pressure: Optional[float] = None,
         warm: Optional[float] = None, tick_pulls: int = 0,
+        digest: Optional[Mapping[int, int]] = None,
     ) -> ShardState:
         sim = self.sims[k]
         return ShardState(
@@ -243,6 +290,11 @@ class PolicyContext:
             resubmits=getattr(sim, "resubmits", 0),
             lost_tasks=getattr(sim, "lost_tasks", 0),
             doomed_workers=self.doomed[k],
+            # read-only view: the snapshot stays frozen end to end even
+            # though the underlying digest is a plain dict
+            warm_digest=(
+                None if digest is None else types.MappingProxyType(digest)
+            ),
         )
 
 
@@ -282,6 +334,17 @@ class AdmissionPolicy:
     #: O(workers) scan per shard per tick; without the flag the field is
     #: ``nan``).  Set it whenever a hook reads the warm-capacity signal.
     uses_warm_capacity: bool = False
+    #: have ``admit_tick`` populate ``ShardState.warm_digest`` (one
+    #: ``Simulator.warm_digest()`` snapshot per shard per tick; without the
+    #: flag the field is ``None``).  Set it whenever a hook reads the
+    #: per-function warm-set digest.
+    uses_warm_digest: bool = False
+    #: with ``steals``: run the per-tick steal round warm-locality-aware
+    #: (``core.stealing.steal_tick(prefer_warm=True)`` — each thief prefers
+    #: exporting tasks whose function is in its own warm digest).  Inert
+    #: without ``steals``; off keeps steal schedules byte-identical to the
+    #: pre-digest tier.
+    steal_affinity: bool = False
 
     def __init__(self, cfg, **kwargs):
         """``cfg`` is the run's ``AdmissionConfig``; extra ``kwargs`` come
@@ -326,14 +389,29 @@ class AdmissionPolicy:
             warm = [ctx.sims[k].warm_capacity() for k in range(K)]
         else:  # unrequested: nan, so an undeclared read fails loudly
             warm = [float("nan")] * K
+        if self.uses_warm_digest:
+            digests = [ctx.sims[k].warm_digest() for k in range(K)]
+        else:  # unrequested: None, so an undeclared read fails loudly
+            digests = [None] * K
         tick_pulls = [0] * K
 
         def state(k: int) -> ShardState:
             return ctx.shard_state(
-                k, t, pressure=eff[k], warm=warm[k], tick_pulls=tick_pulls[k]
+                k, t, pressure=eff[k], warm=warm[k], tick_pulls=tick_pulls[k],
+                digest=digests[k],
             )
 
         heap = self.rank_shards([state(k) for k in range(K)])
+        for key, k in heap:
+            if key != key:  # NaN: poisons every heap comparison silently
+                raise ValueError(
+                    f"{type(self).__name__}.rank_shards returned a NaN key "
+                    f"for shard {k}. NaN compares False against everything, "
+                    "so a NaN-keyed heap silently freezes admission. Most "
+                    "likely the key reads ShardState.warm_capacity without "
+                    "setting uses_warm_capacity = True (the field is nan "
+                    "otherwise; see docs/POLICIES.md §2)."
+                )
         heapq.heapify(heap)
         while ctx.waiting_n and heap:
             key, k = heap[0]
@@ -498,6 +576,131 @@ class CostPolicy(AdmissionPolicy):
 
     def rank_shards(self, states: Sequence[ShardState]) -> List[Tuple[float, int]]:
         return [(self._cost(s), s.index) for s in states]
+
+
+@register_policy
+class AffinityPolicy(AdmissionPolicy):
+    """Warm-locality affinity admission — the KV-router analog.
+
+    Pressure-only ranking sends the next VU to the *emptiest* shard even
+    when a slightly-busier neighbor already holds warm sandboxes for every
+    function the VU calls — trading a queue-free cold start for the warm
+    start Hiku's pull principle exists to harvest.  This policy scores each
+    candidate shard by **expected warm-hit probability × pressure**, the way
+    triton_distributed's KV router scores workers by cache-overlap cost:
+
+    ``key(shard, vu) = pressure − affinity_weight · hit(vu, shard)``
+
+    where ``hit`` blends two warmth signals against the shard's
+    ``ShardState.warm_digest``: the fraction of the VU's whole function-call
+    mix (``PolicyContext.func_profile``) with at least one warm instance,
+    and — weighted by ``first_weight`` — whether the VU's *first* call can
+    start warm right now (the one request whose cold/warm fate admission
+    decides directly; later calls depend on keep-alive surviving the think
+    times).  Lower key pulls first, so warmth is a *discount* on pressure: a
+    shard ``affinity_weight`` pressure units busier still wins when it can
+    serve the VU fully warm, while a stone-cold shard competes on pressure
+    alone.  Because the key depends on *which* VU is at the queue head, the
+    tick re-scores shards per binding (O(K) per VU) instead of using the
+    per-tick heap; ``want_pull``'s watermark gate and the ``batch_size`` cap
+    apply unchanged.
+
+    After each binding the VU's first call optimistically claims one warm
+    instance from the chosen shard's (tick-local) digest copy, so a burst
+    admitted within one tick spreads over the warm capacity instead of
+    dog-piling onto a single warm sandbox.
+
+    ``policy_args``: ``affinity_weight`` (pressure-units discount at a 100%
+    warm score; default 1.0) and ``first_weight`` (first-call share of the
+    hit blend, in ``[0, 1]``; default 0.5).  The defaults are the
+    ``bench_affinity`` acceptance operating point on the 4-shard
+    ``heavy_tail``/``diurnal`` protocol.
+    """
+
+    name = "affinity"
+    uses_warm_digest = True
+
+    def __init__(self, cfg, affinity_weight: float = 1.0,
+                 first_weight: float = 0.5, **kwargs):
+        super().__init__(cfg, **kwargs)
+        if affinity_weight < 0:
+            raise ValueError("affinity_weight must be >= 0")
+        if not 0.0 <= first_weight <= 1.0:
+            raise ValueError("first_weight must be in [0, 1]")
+        self.affinity_weight = float(affinity_weight)
+        self.first_weight = float(first_weight)
+
+    @staticmethod
+    def warm_hit(profile: Sequence[Tuple[int, float]],
+                 digest: Optional[Mapping[int, int]]) -> float:
+        """Expected warm-hit probability of a VU profile against a shard
+        digest: the summed call frequency of profile functions with >= 1
+        warm instance, in ``[0, 1]``."""
+        if not digest:
+            return 0.0
+        return sum(freq for f, freq in profile if digest.get(f, 0) > 0)
+
+    def admit_tick(self, t: float, ctx: PolicyContext) -> None:
+        cfg = self.cfg
+        inv = ctx.inv_workers
+        K = ctx.n_shards
+        eff = [ctx.sims[k].pressure() for k in range(K)]
+        # tick-local digest copies: optimistic claims below must not leak
+        # into the engine's own counters
+        digests = [dict(ctx.sims[k].warm_digest()) for k in range(K)]
+        tick_pulls = [0] * K
+        nan = float("nan")  # uses_warm_capacity is unset: field stays nan
+
+        def state(k: int) -> ShardState:
+            return ctx.shard_state(
+                k, t, pressure=eff[k], warm=nan, tick_pulls=tick_pulls[k],
+                digest=digests[k],
+            )
+
+        fw = self.first_weight
+        while ctx.waiting_n:
+            gid = ctx.peek_next()
+            prof = ctx.func_profile(gid)
+            fi = ctx.programs[gid].func_idx
+            f0 = int(fi[0]) if len(fi) else -1
+            best_key = best_k = None
+            for k in range(K):
+                if cfg.batch_size is not None and tick_pulls[k] >= cfg.batch_size:
+                    continue
+                s = state(k)
+                if not self.want_pull(s):
+                    continue
+                d = digests[k]
+                hit = (1.0 - fw) * self.warm_hit(prof, d)
+                if fw and d.get(f0, 0) > 0:
+                    hit += fw
+                key = s.pressure - self.affinity_weight * hit
+                if best_key is None or key < best_key:
+                    best_key, best_k = key, k
+            if best_k is None:
+                break  # every shard declined or hit its per-tick cap
+            ctx.admit_next(best_k, t)
+            eff[best_k] += inv[best_k]
+            tick_pulls[best_k] += 1
+            if f0 >= 0:  # claim the first call's warm instance, if any
+                d = digests[best_k]
+                c = d.get(f0, 0)
+                if c > 1:
+                    d[f0] = c - 1
+                elif c:
+                    del d[f0]
+
+
+@register_policy
+class AffinityStealPolicy(AffinityPolicy):
+    """Affinity admission plus warm-locality work stealing: the per-tick
+    steal round runs with ``prefer_warm=True``, so each thief exports the
+    newest victim task *whose function it can serve warm* (falling back to
+    the plain newest) — the same digest consumed at both tiers."""
+
+    name = "affinity+steal"
+    steals = True
+    steal_affinity = True
 
 
 @register_policy

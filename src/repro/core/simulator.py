@@ -423,6 +423,15 @@ class Simulator:
         self.salvaged_out = 0  # VUs exported off this (dead) shard
         self.salvaged_in = 0  # salvaged VUs re-homed onto this shard
         self.recovery_s: List[float] = []  # first-failure -> completion, s
+        # advisory preemption notices: (t, worker, until) — see inject_notice
+        self._notices: List[Tuple[float, int, float]] = []
+        # per-function warm-set digest: func -> idle (warm) instance count
+        # across live workers, maintained incrementally at every idle-set
+        # mutation (complete / warm reuse / LRU evict / keep-alive sweep /
+        # worker death).  Pure bookkeeping on existing transitions — no RNG,
+        # no event reordering — so the byte-for-byte replay contract with
+        # tests/legacy is untouched.  Read via warm_digest().
+        self._warm: Dict[int, int] = {}
         # pre-resolved per-function metadata (hot-loop lookups)
         self._fnames = [f.name for f in self.funcs]
         self._fmem = [f.mem_mb for f in self.funcs]
@@ -487,6 +496,27 @@ class Simulator:
         if t < 0:
             raise ValueError(f"inject_worker: t must be >= 0, got {t}")
         self._additions.append((t, worker))
+
+    def inject_notice(self, t: float, worker: int, until: float) -> None:
+        """Advisory preemption notice: ``worker`` is scheduled to die at
+        ``until`` (spot-preemption semantics; the kill needs its own
+        :meth:`inject_failure`).
+
+        While the notice window ``[t, until)`` is open, the worker is
+        excluded from the :meth:`warm_capacity` headroom sum and its idle
+        instances from the :meth:`warm_digest` counts — capacity about to be
+        preempted is not headroom new work should be routed onto.  Purely
+        advisory: the event loop, records, and replay identity are
+        untouched (a static run with notices stays byte-identical to one
+        without).  :meth:`begin` validates ids like :meth:`inject_failure`.
+        """
+        if worker < 0:
+            raise ValueError(f"inject_notice: worker id must be >= 0, got {worker}")
+        if t < 0:
+            raise ValueError(f"inject_notice: t must be >= 0, got {t}")
+        if until < t:
+            raise ValueError(f"inject_notice: until={until} precedes t={t}")
+        self._notices.append((t, worker, until))
 
     # ------------------------------------------------------- fluctuations
     def _fluct_entry(self, n_vus: int) -> Dict:
@@ -670,6 +700,13 @@ class Simulator:
                     f"inject_worker({t}, {w}): t is past the run deadline "
                     f"{self._deadline} and would never fire"
                 )
+        for t, w, until in self._notices:
+            if w not in known:
+                raise ValueError(
+                    f"inject_notice({t}, {w}, {until}): worker {w} is neither "
+                    f"in the initial range [0, {cfg.n_workers}) nor scheduled "
+                    "by inject_worker"
+                )
 
         for vu in range(n_vus):
             self._push(t_start, _SUBMIT, (vu,))
@@ -786,6 +823,18 @@ class Simulator:
             return float("inf")
         return (queued + busy) / alive
 
+    def _doomed_now(self) -> set:
+        """Live worker ids currently inside a preemption-notice window
+        (``tn <= now < until``; see :meth:`inject_notice`).  Empty set —
+        and zero overhead beyond one truth test — when no notices exist."""
+        if not self._notices:
+            return set()
+        now = self.t
+        return {
+            w for tn, w, until in self._notices
+            if tn <= now < until and w in self.workers
+        }
+
     def warm_capacity(self) -> float:
         """Fraction of sandbox-pool memory not pinned by running tasks.
 
@@ -796,14 +845,65 @@ class Simulator:
         0.0 for a dead cluster (no live workers).  This is the cold-start
         cost signal admission policies read (``core.policies.CostPolicy``)
         alongside :meth:`pressure`.
+
+        Workers inside an open preemption-notice window
+        (:meth:`inject_notice`) are excluded from the sum entirely: their
+        pools are capacity about to be preempted, not headroom — counting
+        them would route new work onto sandboxes scheduled to die.  A
+        cluster whose every live worker is doomed reads 0.0.  The field's
+        validity window for policies is documented in docs/POLICIES.md §2.
         """
+        doomed = self._doomed_now()
         total = busy = 0.0
         for w in self.workers.values():
+            if w.wid in doomed:
+                continue
             total += w.pool_mb
             busy += w.busy_mem_mb
         if total <= 0.0:
             return 0.0
         return (total - busy) / total
+
+    def warm_digest(self) -> Dict[int, int]:
+        """Per-function warm-set digest: ``{func_index: warm_count}`` over
+        live, un-doomed workers — the shard's locality signal.
+
+        ``warm_count`` is the number of idle (keep-alive) instances of the
+        function a new request could reuse right now.  The counts are
+        maintained incrementally at every idle-set transition (completion
+        adds, warm reuse / LRU eviction / keep-alive sweep / worker death
+        remove), so the read is O(distinct warm functions) — a dict copy —
+        not an O(workers × instances) scan.  Functions with zero warm
+        instances are absent, which keeps the digest compact.
+
+        Idle instances on workers inside an open preemption-notice window
+        are subtracted (same rule as :meth:`warm_capacity`): warmth about
+        to be preempted must not attract new placements.  The affinity
+        admission policy (``core.policies.AffinityPolicy``) and the
+        work-stealing tier (``core.stealing.steal_tick``) consume this via
+        ``ShardState.warm_digest``; the contract is normative in
+        docs/ARCHITECTURE.md §11.
+        """
+        digest = dict(self._warm)
+        doomed = self._doomed_now()
+        if doomed:
+            for wid in doomed:
+                for func, lst in self.workers[wid].idle.items():
+                    c = digest.get(func, 0) - len(lst)
+                    if c > 0:
+                        digest[func] = c
+                    else:
+                        digest.pop(func, None)
+        return digest
+
+    def _warm_dec(self, func: int, n: int = 1) -> None:
+        """Drop ``n`` warm instances of ``func`` from the digest counts."""
+        w = self._warm
+        c = w.get(func, 0) - n
+        if c > 0:
+            w[func] = c
+        else:
+            w.pop(func, None)
 
     def admit_vu(self, program: VUProgram, t: Optional[float] = None) -> int:
         """Admit one closed-loop VU mid-run (the admission tier's pull).
@@ -844,7 +944,7 @@ class Simulator:
         return vu
 
     # ------------------------------------------------- cross-shard stealing
-    def steal_queued(self, n: int) -> List[StolenTask]:
+    def steal_queued(self, n: int, prefer=None) -> List[StolenTask]:
         """Export up to ``n`` tasks parked on worker pending queues (the
         work-stealing victim hook; see :class:`StolenTask` for what travels).
 
@@ -855,6 +955,14 @@ class Simulator:
         no local events for it remain).  Victim order is deterministic:
         longest pending queue first (ties by registration order), newest
         task first.
+
+        ``prefer`` (optional): a set of function indices the thief can serve
+        warm (its ``warm_digest`` keys).  Victim-worker selection is
+        unchanged, but within the chosen queue the newest task whose
+        function is in ``prefer`` is exported instead of the plain newest —
+        warm-locality stealing.  The fallback when nothing matches, and the
+        ``prefer=None`` default, are byte-identical to the unparameterized
+        form, so existing steal schedules are untouched.
         Each export releases the local scheduler's connection via
         ``on_cancel`` — the assignment never executed here.
         """
@@ -869,6 +977,15 @@ class Simulator:
             if victim is None:
                 break
             task = victim.pending.pop()
+            if prefer and task.func not in prefer:
+                # scan newest -> oldest for the first warm-servable task;
+                # the already-popped newest is the fallback
+                pend = victim.pending
+                for i in range(len(pend) - 1, -1, -1):
+                    if pend[i].func in prefer:
+                        pend.append(task)  # put the fallback back (newest)
+                        task = pend.pop(i)
+                        break
             self.sched.on_cancel(task.worker, self._fnames[task.func])
             vu = task.vu
             self._flush_fluct()
@@ -1134,6 +1251,7 @@ class Simulator:
         func = task.func
         if func in worker.idle:
             inst = worker.pop_idle(func)
+            self._warm_dec(func)  # warm reuse: the instance is busy again
             worker.busy_mem_mb += inst.mem_mb
             task.cold = False
             base_ms = self._fwarm[func]
@@ -1144,6 +1262,7 @@ class Simulator:
                 evicted = worker.evict_lru()
                 if evicted is None:
                     break
+                self._warm_dec(evicted.func)
                 self.sched.on_evict(worker.wid, self._fnames[evicted.func])
             if worker.busy_mem_mb + worker.idle_mem_mb + mem > worker.pool_mb:
                 worker.pending.append(task)  # waits for memory
@@ -1206,6 +1325,7 @@ class Simulator:
         else:
             lst.append(_Instance(func, mem, t))  # t monotone: stays ascending
         worker.idle_mem_mb += mem
+        self._warm[func] = self._warm.get(func, 0) + 1  # one more warm inst
         self.sched.on_finish(worker.wid, self._fnames[func])
         t_done = t + self._overhead_s
         if task.fail_t >= 0.0:
@@ -1255,6 +1375,7 @@ class Simulator:
                         self.sched.on_evict(worker.wid, self._fnames[func])
                         cut += 1
                     if cut:
+                        self._warm_dec(func, cut)
                         if cut == end:
                             del worker.idle[func]
                         else:
@@ -1278,6 +1399,8 @@ class Simulator:
             fresh.attempts = task.attempts
             fresh.fail_t = task.fail_t
             self._retry_or_lose(fresh)
+        for func, lst in worker.idle.items():
+            self._warm_dec(func, len(lst))  # the warm set dies with the worker
         worker.running, worker.pending, worker.idle = [], [], {}
         worker.busy_mem_mb = worker.idle_mem_mb = 0.0
         del self.workers[wid]

@@ -71,6 +71,7 @@ def steal_tick(
     inv_workers: Sequence[float],
     t: Optional[float] = None,
     max_moves: Optional[int] = None,
+    prefer_warm: bool = False,
 ) -> List[Migration]:
     """One stealing round over co-run shards; returns the moves it made.
 
@@ -85,6 +86,14 @@ def steal_tick(
         inv_workers: per-shard ``1 / n_workers`` pressure increments.
         t: simulated re-injection time (default: each receiver's clock).
         max_moves: optional hard cap on migrations this tick.
+        prefer_warm: warm-locality stealing (``AdmissionPolicy
+            .steal_affinity``): each move passes the thief's warm-digest
+            function set (``Simulator.warm_digest`` keys, computed once per
+            thief per tick) to ``steal_queued(prefer=...)``, so within the
+            victim's chosen queue the newest *warm-servable* task is
+            exported instead of the plain newest.  Victim/thief heap order
+            is untouched, and ``False`` (the default) is byte-identical to
+            the pre-digest tier — the ARCHITECTURE §11 off-path guarantee.
 
     The two heaps are rebuilt from live ``Simulator.pressure()`` each tick;
     within the tick, moves adjust effective pressures exactly like admission
@@ -103,12 +112,22 @@ def steal_tick(
     heapq.heapify(victims)
     heapq.heapify(thieves)
     moves: List[Migration] = []
+    # per-thief warm-function sets, computed lazily once per tick: a steal
+    # moves only *pending* tasks, which never touch any shard's idle set,
+    # so the digests cannot change mid-tick
+    warm_sets: dict = {}
     while victims and thieves and (max_moves is None or len(moves) < max_moves):
         neg_pv, v = victims[0]
         pt, th = thieves[0]
         if -neg_pv <= steal_watermark or pt >= pull_watermark:
             break  # both frontiers inside the watermark band: balanced enough
-        got = sims[v].steal_queued(1)
+        if prefer_warm:
+            prefer = warm_sets.get(th)
+            if prefer is None:
+                prefer = warm_sets[th] = frozenset(sims[th].warm_digest())
+            got = sims[v].steal_queued(1, prefer=prefer)
+        else:
+            got = sims[v].steal_queued(1)
         if not got:
             heapq.heappop(victims)  # pressured but nothing queued is stealable
             continue

@@ -440,3 +440,108 @@ def test_salvage_flag_is_inert_without_faults():
     assert np.array_equal(a.assign_w, b.assign_w)
     assert a.n_salvages == b.n_salvages == 0
     assert a.stranded == b.stranded and a.lost_tasks == b.lost_tasks == 0
+
+
+def test_doomed_worker_excluded_from_warm_signals():
+    """Pinned regression: a worker inside an open preemption-notice window
+    contributes neither headroom (warm_capacity) nor warmth (warm_digest) —
+    and contributes both again once the window closes without a kill."""
+    funcs = make_functions(seed=0)
+    sim = Simulator(make_scheduler("hiku", 1, seed=3), funcs=funcs,
+                    cfg=SimConfig(n_workers=1), seed=3)
+    sim.inject_notice(8.0, 0, 12.0)
+    # long-running programs keep the event clock moving through the window
+    sim.begin(n_vus=2, duration_s=30.0,
+              programs=make_vu_programs(funcs, 2, 64, 3))
+    sim.step_until(7.0)  # pre-window: the sole worker is plain headroom
+    assert sim.t < 8.0
+    assert sim.warm_capacity() > 0.0 and sim.warm_digest()
+    sim.step_until(9.5)  # inside [8, 12): every live worker is doomed
+    assert 8.0 <= sim.t < 12.0
+    assert sim.warm_capacity() == 0.0
+    assert sim.warm_digest() == {}
+    sim.step_until(13.0)  # window expired (no kill): signal restored
+    assert sim.t >= 12.0
+    assert sim.warm_capacity() > 0.0
+    restored = sim.warm_digest()
+    recount = {}
+    for w in sim.workers.values():
+        for func, lst in w.idle.items():
+            if lst:
+                recount[func] = recount.get(func, 0) + len(lst)
+    assert restored and restored == recount
+
+
+def test_doomed_warm_capacity_reaches_admission_snapshots():
+    """The admission tier forwards notices to the owning shard engine, so a
+    policy's ShardState.warm_capacity drops for the doomed shard's window."""
+    from repro.core.policies import CostPolicy, register_policy, unregister_policy
+
+    seen = []
+
+    class WarmProbe(CostPolicy):
+        name = "probe_warm"
+
+        def want_pull(self, state):
+            seen.append((state.index, state.t, state.warm_capacity))
+            return super().want_pull(state)
+
+    register_policy(WarmProbe)
+    try:
+        adm = AdmissionSimulator(
+            2, 2, scheduler="hiku", seed=0,  # 1 worker per shard
+            admission=AdmissionConfig(policy="probe_warm", tick_s=0.25),
+        )
+        progs = make_vu_programs(adm.funcs, 8, 16, 0)
+        plan = FaultPlan("spot", [
+            FaultEvent(t=2.0, kind="notice", worker=0, until=6.0),
+        ])
+        adm.run(8, 12.0, programs=progs, faults=plan,
+                arrivals=[0.0, 0.0, 2.5, 2.5, 3.0, 3.5, 7.0, 7.5])
+        shard0_in = [w for k, t, w in seen if k == 0 and 2.0 <= t < 6.0]
+        assert shard0_in and all(w == 0.0 for w in shard0_in)
+        # the same shard reads normal headroom outside the window ...
+        assert any(w > 0.0 for k, t, w in seen if k == 0 and t >= 6.0)
+        # ... and the un-noticed shard never reads a doomed zero
+        assert all(w > 0.0 for k, _, w in seen if k == 1)
+    finally:
+        unregister_policy("probe_warm")
+
+
+# -------------------------------------------------- dark-cluster drain order
+def test_drain_ordering_oldest_outage_first_across_dark_ticks():
+    """Pinned regression for drain_tick's buffer ordering: exports carried
+    across multiple fully-dark ticks stay ahead of every newer outage's
+    exports, and the first live shard receives them in exactly that order."""
+    from repro.core.stealing import drain_tick
+
+    simA, _ = _dead_pressured_sim(seed=5)
+    simB, _ = _dead_pressured_sim(seed=6)
+    inv = [0.5, 0.5]
+    # tick 1: only A is down, cluster fully dark — its exports buffer
+    moves, left1 = drain_tick([simA], [0.5], t=5.0)
+    assert moves == [] and len(left1) > 0
+    assert all(src == 0 for src, _ in left1)
+    # tick 2: still dark; B's outage is newer — appended AFTER the buffer
+    moves, left2 = drain_tick([simA, simB], inv, t=6.0, pending=left1)
+    assert moves == []
+    assert left2[: len(left1)] == left1  # oldest outage stays first
+    assert len(left2) > len(left1)
+    assert all(src == 1 for src, _ in left2[len(left1):])
+    # exactly-once: the dead shards have nothing left to export
+    assert simA.salvage_queued() == [] and simB.salvage_queued() == []
+    # tick 3: a live shard appears — placement follows buffer order exactly
+    funcs = make_functions(seed=0)
+    live = Simulator(make_scheduler("hiku", 4, seed=9), funcs=funcs,
+                     cfg=SimConfig(n_workers=4), seed=9)
+    live.begin(n_vus=1, duration_s=30.0,
+               programs=make_vu_programs(funcs, 1, 8, 9))
+    live.step_until(7.0)
+    moves, left3 = drain_tick([simA, simB, live], inv + [0.25], t=7.0,
+                              pending=left2)
+    assert left3 == []
+    assert [(mv.src, mv.src_vu, mv.func, mv.ev_idx) for mv in moves] == [
+        (src, sv.stolen.src_vu, sv.stolen.func, sv.stolen.ev_idx)
+        for src, sv in left2
+    ]
+    assert all(mv.dst == 2 for mv in moves)

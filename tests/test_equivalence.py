@@ -122,3 +122,39 @@ def test_kshard_streams_byte_identical_to_seed_engine(backend):
         assert got == want, f"shard {spec.index} diverged from the seed engine"
         got_asg = list(zip(res.assign_t.tolist(), res.assign_w.tolist()))
         assert got_asg == [(t, w) for t, w in lsim.assignments], f"shard {spec.index}"
+
+
+def test_byte_identical_with_warm_digest_polling():
+    """Reading the warm-set digest (and warm_capacity) between time slices is
+    pure observation: a polled static run still replays the FROZEN seed
+    engine byte-for-byte — the docs/ARCHITECTURE.md §11 off-path guarantee.
+    The small pool forces LRU evictions, so the digest's decrement paths are
+    exercised while the identity holds."""
+    name, seed, n_workers, n_vus, dur = "hiku", 11, 5, 40, 30.0
+    cfg_kw = dict(mem_pool_mb=1024.0)
+    lsim = LegacySimulator(
+        legacy_make_scheduler(name, n_workers, seed=seed),
+        cfg=LegacySimConfig(n_workers=n_workers, **cfg_kw), seed=seed,
+    )
+    lrecs = lsim.run(n_vus=n_vus, duration_s=dur)
+    sim = Simulator(
+        make_scheduler(name, n_workers, seed=seed),
+        cfg=SimConfig(n_workers=n_workers, **cfg_kw), seed=seed,
+    )
+    sim.begin(n_vus=n_vus, duration_s=dur)
+    polled_nonempty = 0
+    for i in range(1, int(dur * 2) + 1):
+        sim.step_until(i * 0.5)
+        polled_nonempty += bool(sim.warm_digest())
+        sim.warm_capacity()
+    sim.step_until(float("inf"))  # drain completions past the poll horizon
+    assert sim.done and polled_nonempty > 0
+    cols = sim.record_columns
+    got = list(
+        zip(cols.t_submit.tolist(), cols.t_done.tolist(), cols.func.tolist(),
+            cols.worker.tolist(), cols.cold.tolist(), cols.vu.tolist())
+    )
+    want = [(r.t_submit, r.t_complete, r.func, r.worker, r.cold, r.vu)
+            for r in lrecs]
+    assert got == want
+    assert list(sim.assignments) == list(lsim.assignments)

@@ -50,9 +50,10 @@ def _run(policy, scn, dur, K=2, W=8, seed=0, **adm_kw):
 
 
 # ------------------------------------------------------------ the registry
-def test_available_policies_contains_the_six_builtins():
+def test_available_policies_contains_the_builtins():
     names = available_policies()
-    for name in ("pull", "pull+steal", "round_robin", "deadline", "cost", "predictive"):
+    for name in ("pull", "pull+steal", "round_robin", "deadline", "cost",
+                 "predictive", "affinity", "affinity+steal"):
         assert name in names
 
 
@@ -312,6 +313,110 @@ def test_cost_policy_prefers_warm_shards():
     assert not pol.want_pull(cold)  # 0.5 + 0.5 penalty >= 0.75 watermark
     keys = dict((k, key) for key, k in pol.rank_shards([warm, cold]))
     assert keys[0] < keys[1]
+
+
+def test_affinity_policy_scores_warm_hit_against_digest():
+    """The hit blend: profile overlap plus first-call warmth, and the
+    pressure discount ranks a warmer-but-busier shard first."""
+    from repro.core.policies import AffinityPolicy
+
+    prof = ((3, 0.5), (7, 0.25), (9, 0.25))
+    assert AffinityPolicy.warm_hit(prof, {3: 2, 9: 1}) == pytest.approx(0.75)
+    assert AffinityPolicy.warm_hit(prof, {}) == 0.0
+    assert AffinityPolicy.warm_hit(prof, None) == 0.0
+    assert AffinityPolicy.warm_hit((), {3: 1}) == 0.0
+
+
+def test_affinity_policy_routes_to_warm_shard():
+    """A VU whose functions are warm on the busier shard still binds there:
+    warmth is a pressure discount (the KV-router analog)."""
+    import warnings as _w
+
+    from repro.core import make_functions as _mf
+    from repro.core.trace import make_vu_programs
+
+    adm = AdmissionSimulator(
+        2, 8, scheduler="hiku", cfg=SimConfig(mem_pool_mb=1024.0), seed=0,
+        admission=AdmissionConfig(policy="affinity", tick_s=0.25),
+    )
+    funcs = adm.funcs
+    # wave 1 seeds shard warmth; wave 2 (identical programs) arrives once
+    # the wave-1 VUs' functions are warm *somewhere* and should co-locate
+    progs = make_vu_programs(funcs, 8, 16, 0)
+    progs = progs[:4] + progs[:4]  # wave 2 repeats wave 1's programs
+    arrivals = [0.0] * 4 + [3.0] * 4
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)
+        run = adm.run(8, 12.0, programs=progs, arrivals=arrivals)
+    assert run.admitted == 8
+    home = {}
+    for s in run.shards:
+        for g in s.admitted.tolist():
+            home.setdefault(g, s.index)
+    # each wave-2 VU landed on its wave-1 twin's shard (warm for exactly
+    # its function mix), despite that shard carrying the wave-1 load
+    for g in range(4):
+        assert home[g + 4] == home[g], (g, home)
+
+
+def test_nan_rank_key_raises_clear_error():
+    """Satellite bugfix: a NaN rank key (the classic undeclared
+    warm_capacity read) fails loudly instead of silently freezing the
+    heap."""
+
+    class NanRank(AdmissionPolicy):
+        name = "nan_rank"
+
+        # deliberately MISSING uses_warm_capacity = True
+        def rank_shards(self, states):
+            return [(s.pressure + s.warm_capacity, s.index) for s in states]
+
+    register_policy(NanRank)
+    try:
+        scn, dur = _quick_scenario(n_vus=4)
+        with pytest.raises(ValueError, match="uses_warm_capacity"):
+            _run("nan_rank", scn, dur)
+    finally:
+        unregister_policy("nan_rank")
+
+
+def test_warm_digest_gated_by_flag_and_read_only():
+    """ShardState.warm_digest is None unless the policy declares
+    ``uses_warm_digest``; when populated it is a read-only mapping view."""
+    seen = {}
+
+    class DigestProbe(AdmissionPolicy):
+        name = "digest_probe"
+        uses_warm_digest = True
+
+        def want_pull(self, state):
+            seen[state.index] = state.warm_digest
+            return super().want_pull(state)
+
+    class PlainProbe(AdmissionPolicy):
+        name = "plain_probe"
+        plain_seen = []
+
+        def want_pull(self, state):
+            PlainProbe.plain_seen.append(state.warm_digest)
+            return super().want_pull(state)
+
+    register_policy(DigestProbe)
+    register_policy(PlainProbe)
+    try:
+        scn, dur = _quick_scenario(n_vus=6)
+        _run("digest_probe", scn, dur)
+        assert seen, "probe never saw a shard state"
+        for digest in seen.values():
+            assert digest is not None
+            with pytest.raises(TypeError):
+                digest[0] = 99  # frozen-snapshot read surface
+        _run("plain_probe", scn, dur)
+        assert PlainProbe.plain_seen
+        assert all(d is None for d in PlainProbe.plain_seen)
+    finally:
+        unregister_policy("digest_probe")
+        unregister_policy("plain_probe")
 
 
 def test_predictive_policy_raises_watermark_under_bursts():

@@ -120,3 +120,61 @@ def test_function_table_composition():
     assert len(funcs) == 40  # 8 apps x 5 copies (paper setup)
     assert abs(sum(f.weight for f in funcs) - 1.0) < 1e-9
     assert all(f.cold_ms > f.warm_ms for f in funcs)
+
+
+# --------------------------------------------------- warm-set digest (§11)
+def _digest_recount(sim):
+    """Brute-force ground truth: idle-instance counts over live workers."""
+    counts = {}
+    for w in sim.workers.values():
+        for func, lst in w.idle.items():
+            if lst:
+                counts[func] = counts.get(func, 0) + len(lst)
+    return counts
+
+
+def test_warm_digest_matches_brute_force_recount():
+    """The incrementally maintained digest equals an O(workers x instances)
+    recount of the idle sets at every externally observable point — through
+    warm reuse, LRU eviction, keep-alive sweeps, and worker churn."""
+    from repro.core.trace import make_vu_programs
+
+    funcs = make_functions(seed=0)
+    cfg = SimConfig(n_workers=3, mem_pool_mb=600.0)  # small pool: forces LRU
+    sim = Simulator(make_scheduler("hiku", 3, seed=4), funcs=funcs, cfg=cfg, seed=4)
+    sim.inject_failure(6.0, 1)   # a warm set dies with its worker
+    sim.inject_worker(9.0, 1)    # ... and a cold one joins
+    progs = make_vu_programs(funcs, 12, 64, 4)
+    sim.begin(n_vus=12, duration_s=20.0, programs=progs)
+    checked_nonempty = 0
+    for i in range(1, 81):
+        sim.step_until(i * 0.25)
+        digest = sim.warm_digest()
+        assert digest == _digest_recount(sim), f"diverged at t={sim.t}"
+        assert all(c > 0 for c in digest.values())  # compact: no zero rows
+        checked_nonempty += bool(digest)
+    assert checked_nonempty > 0, "scenario never produced a warm instance"
+
+
+def test_warm_digest_reads_are_inert():
+    """Off-path byte identity: polling warm_digest()/warm_capacity() between
+    time slices must not perturb the record stream."""
+    from repro.core.trace import make_vu_programs
+
+    funcs = make_functions(seed=0)
+    progs = make_vu_programs(funcs, 10, 48, 2)
+
+    def drive(poll):
+        sim = Simulator(
+            make_scheduler("hiku", 4, seed=2), funcs=funcs,
+            cfg=SimConfig(n_workers=4), seed=2,
+        )
+        sim.begin(n_vus=10, duration_s=15.0, programs=progs)
+        for i in range(1, 61):
+            sim.step_until(i * 0.25)
+            if poll:
+                sim.warm_digest()
+                sim.warm_capacity()
+        return sim.record_columns
+
+    assert drive(poll=True).equals(drive(poll=False))

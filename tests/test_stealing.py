@@ -357,3 +357,91 @@ def test_unadmitted_vus_raise_runtime_warning():
         warnings.simplefilter("error", RuntimeWarning)
         r2 = adm.run(4, 10.0, programs=progs)
     assert r2.unadmitted == 0
+
+
+# ------------------------------------------------- warm-locality stealing
+def test_steal_queued_prefer_picks_newest_warm_servable():
+    """With ``prefer``, the export is the newest pending task the thief can
+    serve warm — not the plain newest — and the rest of the queue keeps its
+    relative order (the fallback newest goes back on top)."""
+    sim, _, _ = _pressured_sim(n_vus=12)
+    victim = max(sim.workers.values(), key=lambda w: len(w.pending))
+    before = [(tk.func, tk.ev_idx) for tk in victim.pending]
+    assert len(before) >= 2
+    # a function present mid-queue but not at the newest slot
+    target = next(
+        (f for f, _ in reversed(before[:-1]) if f != before[-1][0]), None
+    )
+    assert target is not None, "scenario needs >=2 distinct pending functions"
+    got = sim.steal_queued(1, prefer={target})
+    assert len(got) == 1 and got[0].func == target
+    stolen_key = next(k for k in reversed(before) if k[0] == target)
+    after = [(tk.func, tk.ev_idx) for tk in victim.pending]
+    assert after == [k for k in before if k != stolen_key]
+
+
+def test_steal_queued_prefer_without_match_is_plain_newest():
+    """A prefer set the victim cannot satisfy falls back byte-identically to
+    the unparameterized export (same task, same remaining queue)."""
+    plain, _, _ = _pressured_sim(n_vus=12)
+    twin, _, _ = _pressured_sim(n_vus=12)
+    a = plain.steal_queued(1)[0]
+    b = twin.steal_queued(1, prefer=frozenset({10**6}))[0]
+    assert (a.func, a.ev_idx, a.src_vu) == (b.func, b.ev_idx, b.src_vu)
+    assert (
+        [(tk.func, tk.ev_idx) for w in plain.workers.values() for tk in w.pending]
+        == [(tk.func, tk.ev_idx) for w in twin.workers.values() for tk in w.pending]
+    )
+
+
+def _warm_thief(funcs, seed=11):
+    """A lightly loaded 2-worker sim with real warm instances to prefer."""
+    sim = Simulator(
+        make_scheduler("hiku", 2, seed=seed), funcs=funcs,
+        cfg=SimConfig(n_workers=2), seed=seed,
+    )
+    sim.begin(n_vus=1, duration_s=20.0,
+              programs=make_vu_programs(funcs, 1, 32, seed))
+    sim.step_until(2.0)
+    return sim
+
+
+def test_steal_tick_prefer_warm_exports_thief_servable_task():
+    """End-to-end: ``prefer_warm=True`` passes the thief's warm-digest keys
+    to the victim, so the move matches what ``steal_queued(prefer=digest)``
+    would export — warm-locality all the way through the coordinator."""
+    victim, funcs, _ = _pressured_sim(seed=5, n_vus=12)
+    thief = _warm_thief(funcs)
+    digest = frozenset(thief.warm_digest())
+    assert digest, "thief must hold warm instances for the test to bite"
+    twin, _, _ = _pressured_sim(seed=5, n_vus=12)
+    expected = twin.steal_queued(1, prefer=digest)[0]
+    moves = steal_tick(
+        [victim, thief], steal_watermark=2.0, pull_watermark=1.0,
+        inv_workers=[0.5, 0.5], max_moves=1, prefer_warm=True,
+    )
+    assert len(moves) == 1 and (moves[0].src, moves[0].dst) == (0, 1)
+    assert (moves[0].src_vu, moves[0].func, moves[0].ev_idx) == (
+        expected.src_vu, expected.func, expected.ev_idx,
+    )
+
+
+def test_steal_tick_prefer_warm_without_warmth_matches_plain_schedule():
+    """A thief with an empty digest makes ``prefer_warm=True`` collapse to
+    the plain schedule — the §11 off-path guarantee at the coordinator."""
+    funcs = make_functions(seed=0)
+
+    def schedule(prefer_warm):
+        victim, _, _ = _pressured_sim(seed=5, n_vus=12)
+        thief = _idle_sim(funcs)  # zero VUs: warm_digest() is empty
+        assert thief.warm_digest() == {}
+        return [
+            (mv.src, mv.dst, mv.src_vu, mv.func, mv.ev_idx)
+            for mv in steal_tick(
+                [victim, thief], steal_watermark=2.0, pull_watermark=1.0,
+                inv_workers=[0.5, 0.5], prefer_warm=prefer_warm,
+            )
+        ]
+
+    warm = schedule(True)
+    assert warm and warm == schedule(False)

@@ -22,6 +22,11 @@ end-to-end tour; each symbol's docstring states which contracts bind it):
   contract), ``Scenario``/``make_scenario``/``available_scenarios``
   (bursty workload suite), ``StolenTask``/``Migration``/``steal_tick``
   (cross-shard work stealing over the admission co-run);
+* learned state — ``DurationEstimator``/``BanditTuner``
+  (``core.estimators``: snapshot-exact online estimation feeding the
+  ``sjf``/``bandit`` policies), ``ShardScript``/``scripts_from_run``/
+  ``replay_shards`` (``core.replay``: scripted per-shard re-execution of
+  a recorded admission run, byte-identical on all three backends);
 * chaos — ``FaultEvent``/``FaultPlan`` (declarative seeded fault
   schedules) with the ``shard_kill_wave``/``spot_preemption``/
   ``rolling_restart``/``flappy_workers`` generators, plus
@@ -48,6 +53,7 @@ from .chaos import (
     shard_kill_wave,
     spot_preemption,
 )
+from .estimators import BanditTuner, DurationEstimator
 from .hiku import HikuScheduler
 from .jax_sched import (
     ARRIVAL,
@@ -76,6 +82,7 @@ from .policies import (
     unregister_policy,
 )
 from .records import RecordAccumulator, RecordColumns, RequestRecord
+from .replay import ShardScript, replay_shards, scripts_from_run
 from .scheduler import Scheduler, available_schedulers, make_scheduler
 from .shard import (
     MergedRun,
@@ -97,6 +104,8 @@ __all__ = [
     "AdmissionRun",
     "AdmissionShard",
     "AdmissionSimulator",
+    "BanditTuner",
+    "DurationEstimator",
     "EVICT",
     "FINISH",
     "FaultEvent",
@@ -115,6 +124,7 @@ __all__ = [
     "Scenario",
     "Scheduler",
     "ShardResult",
+    "ShardScript",
     "ShardSpec",
     "ShardState",
     "ShardedSimulator",
@@ -137,10 +147,12 @@ __all__ = [
     "make_scheduler",
     "make_vu_programs",
     "register_policy",
+    "replay_shards",
     "rolling_restart",
     "sched_many",
     "sched_many_fused",
     "sched_step",
+    "scripts_from_run",
     "shard_kill_wave",
     "shard_seed",
     "spot_preemption",

@@ -41,7 +41,8 @@ policy decisions, dispatched through the pluggable registry in
 ``core.policies``: ``AdmissionConfig.policy`` names any registered
 ``AdmissionPolicy`` (``available_policies()`` lists them — ``pull``,
 ``round_robin``, ``pull+steal``, ``deadline``, ``cost``, ``predictive``,
-``affinity``, ``affinity+steal`` ship built in), and the three original
+``affinity``, ``affinity+steal`` plus the learned ``sjf``, ``bandit`` and
+``bandit+steal`` ship built in), and the three original
 behaviors run byte-identically through the same dispatch.  ``core.workloads`` generates the bursty
 scenario suite (flash crowds, diurnal load, ON/OFF arrivals, heavy-tailed
 service mixes) the policies are benchmarked on
@@ -67,7 +68,7 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from .metrics import RunMetrics, summarize
-from .policies import PolicyContext, get_policy_class, make_policy
+from .policies import PolicyContext, get_policy_class, make_policy, policy_knobs
 from .records import RecordColumns
 from .scheduler import make_scheduler
 from .shard import merge_assignments, merge_window, shard_seed, split_even
@@ -118,8 +119,12 @@ class AdmissionConfig:
             ``"predictive"`` (EWMA arrival-forecast-modulated watermark)
             and ``"affinity"``/``"affinity+steal"`` (warm-locality routing
             against the per-function warm-set digest; the ``+steal``
-            variant also steals warm-first).  Unknown names raise at config
-            construction with the available list.
+            variant also steals warm-first), plus the learned tier —
+            ``"sjf"`` (queue ordered by predicted total service time from
+            an online per-function duration estimator) and
+            ``"bandit"``/``"bandit+steal"`` (bandit-tuned watermark /
+            watermark-pair; see ``core.estimators``).  Unknown names raise
+            at config construction with the available list.
         steal_watermark: pressure above which a shard's queued tasks may be
             stolen (stealing policies only).  Must be >= ``watermark`` so a
             shard can never be victim and thief in the same tick; the band
@@ -163,8 +168,21 @@ class AdmissionConfig:
                 )
             if self.steal_batch is not None and self.steal_batch < 1:
                 raise ValueError("steal_batch must be >= 1 (or None for uncapped)")
-        # surface bad policy knobs at config time, not mid-run
-        cls(self, **dict(self.policy_args or {}))
+        # surface bad policy knobs at config time, not mid-run — naming the
+        # offending key(s) and the accepted knobs for the resolved class
+        args = dict(self.policy_args or {})
+        try:
+            cls(self, **args)
+        except TypeError as err:
+            knobs = policy_knobs(cls)
+            bad = sorted(k for k in args if k not in knobs)
+            if not bad:
+                raise  # a TypeError of the policy's own making
+            raise TypeError(
+                f"policy {self.policy!r} ({cls.__name__}) got unknown "
+                f"policy_args key(s) {', '.join(map(repr, bad))}; accepted "
+                f"knobs: {knobs if knobs else '(none)'}"
+            ) from err
 
 
 @dataclasses.dataclass
@@ -231,6 +249,12 @@ class AdmissionRun:
     recovery_s: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0)
     )
+    #: the learned policy's per-window state snapshots, when the run was
+    #: recorded (``policy_args={"record_state": True}`` on a
+    #: ``LearnedPolicy``); pure JSON types, feedable back through
+    #: ``policy_args={"replay_from": ...}`` for a byte-identical replay.
+    #: ``None`` for unrecorded or non-learned runs.
+    policy_state: Optional[List[Mapping]] = None
 
     @property
     def n_migrations(self) -> int:
@@ -632,11 +656,15 @@ class AdmissionSimulator:
             if t < duration_s and ctx.waiting_n:
                 policy.admit_tick(t, ctx)
             if policy.steals and t < duration_s:
-                # post-admission rebalance: the pull heap run in reverse too
+                # post-admission rebalance: the pull heap run in reverse too;
+                # the watermark pair routes through the policy so learned
+                # stealing policies (bandit+steal) can tune the band per
+                # window (default: the static config pair, byte-identical)
+                steal_wm, pull_wm = policy.steal_params()
                 moves = steal_tick(
                     sims,
-                    steal_watermark=adm.steal_watermark,
-                    pull_watermark=adm.watermark,
+                    steal_watermark=steal_wm,
+                    pull_watermark=pull_wm,
                     inv_workers=self.inv_workers,
                     t=t,
                     max_moves=adm.steal_batch,
@@ -657,10 +685,13 @@ class AdmissionSimulator:
             for sim in sims:
                 sim.step_until(t)
         wall_s = time.perf_counter() - t0
-        return self._merge(
+        run = self._merge(
             sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
             migrations, dl, arr, salvages, salvage_buf,
         )
+        if getattr(policy, "record_state", False):
+            run.policy_state = list(policy.snapshots)
+        return run
 
     def _pull_tick(self, t, sims, programs, waiting, admitted, admit_t, pulls) -> None:
         """One watermark-pull admission round over an externally supplied

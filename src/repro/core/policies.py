@@ -42,6 +42,21 @@ stealing suites pass unmodified), and three new policies ship against it:
   also runs the steal round warm-locality-aware (thieves prefer tasks they
   can serve warm).
 
+Three **learned** policies (ROADMAP item 5) carry online state fed
+exclusively through :meth:`AdmissionPolicy.observe` (``core.estimators``
+holds the state machinery; :class:`LearnedPolicy` the windowed
+fold/record/replay discipline):
+
+* ``sjf`` — shortest-predicted-job-first: the global queue is ordered by
+  each VU's predicted total service time from an online per-function
+  Welford duration estimator (Przybylski et al.'s execution-time-aware
+  scheduling, learned on the fly).
+* ``bandit`` / ``bandit+steal`` — a bandit meta-policy (UCB1 or seeded
+  epsilon-greedy) tuning the pull watermark — and, in the ``+steal``
+  variant, the (steal, pull) watermark pair — per scenario from a windowed
+  reward blending window p99 and cold rate (Nguyen et al.'s adaptive
+  thresholds, model-free).
+
 Determinism contract (normative; docs/POLICIES.md is the author guide):
 policy decisions must be a pure function of the visible state — the
 :class:`ShardState` fields, the policy's own config, and what it has
@@ -54,27 +69,61 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import inspect
 import types
 from collections import deque
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Type
+from typing import (
+    Dict,
+    List,
+    Mapping,
+    NamedTuple,
+    Optional,
+    Sequence,
+    Tuple,
+    Type,
+)
+
+from .estimators import BanditTuner, DurationEstimator
 
 __all__ = [
     "AdmissionPolicy",
     "AffinityPolicy",
     "AffinityStealPolicy",
+    "BanditPolicy",
+    "BanditStealPolicy",
+    "Completion",
     "CostPolicy",
     "DeadlinePolicy",
+    "LearnedPolicy",
     "PolicyContext",
     "PredictivePolicy",
     "PullPolicy",
     "PullStealPolicy",
     "RoundRobinPolicy",
     "ShardState",
+    "SjfPolicy",
     "available_policies",
     "make_policy",
+    "policy_knobs",
     "register_policy",
     "unregister_policy",
 ]
+
+
+class Completion(NamedTuple):
+    """One completed request, as seen by the policy-facing completion feed
+    (:meth:`PolicyContext.new_completions`).
+
+    ``duration_ms`` is the externally observable request latency
+    (``(t_done - t_submit) * 1e3`` — the same arithmetic the metrics layer
+    uses), ``gid`` the global VU id, ``shard`` the shard it completed on.
+    """
+
+    gid: int
+    func: int
+    duration_ms: float
+    cold: bool
+    shard: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +236,9 @@ class PolicyContext:
         self.doomed: List[int] = [0] * len(sims)
         # per-VU function-frequency profiles, computed lazily (func_profile)
         self._profiles: Dict[int, Tuple[Tuple[int, float], ...]] = {}
+        # completion-feed cursors: rows of each shard's record accumulator
+        # already handed out through new_completions()
+        self._rec_seen: List[int] = [0] * len(sims)
 
     # ------------------------------------------------------------- queue
     @property
@@ -253,6 +305,44 @@ class PolicyContext:
                 )
             self._profiles[gid] = prof
         return prof
+
+    # ------------------------------------------------------ completion feed
+    def new_completions(self) -> List[Completion]:
+        """Requests completed since the last call, exactly once each, in
+        canonical order (shard index, then per-shard completion order).
+
+        This is the **only** sanctioned signal source for learned policy
+        state (docs/POLICIES.md "Learned state"): the admission loop calls
+        ``observe`` once per tick before admission, so a policy that drains
+        this feed there sees every completion exactly once, in an order
+        that is a pure function of the run — the property replay needs.
+        Each record lives on exactly one shard's accumulator (a salvaged
+        VU's later requests complete on its *new* shard, under a fresh
+        local id already present in the admission table), so per-shard
+        cursors cannot double-count across migrations or salvage.
+        """
+        out: List[Completion] = []
+        for k, sim in enumerate(self.sims):
+            acc = sim._rec  # the engine's columnar accumulator (mediator-only)
+            n = len(acc)
+            i = self._rec_seen[k]
+            if n <= i:
+                continue
+            ts, td = acc.t_submit, acc.t_done
+            fn, cold, vu = acc.func, acc.cold, acc.vu
+            adm = self.admitted[k]
+            for j in range(i, n):
+                out.append(
+                    Completion(
+                        gid=adm[vu[j]],
+                        func=fn[j],
+                        duration_ms=(td[j] - ts[j]) * 1e3,
+                        cold=cold[j],
+                        shard=k,
+                    )
+                )
+            self._rec_seen[k] = n
+        return out
 
     # ------------------------------------------------------------- binding
     def admit_next(self, k: int, t: float) -> int:
@@ -345,13 +435,22 @@ class AdmissionPolicy:
     #: without ``steals``; off keeps steal schedules byte-identical to the
     #: pre-digest tier.
     steal_affinity: bool = False
+    #: policy carries learned (observation-fed) state subject to the
+    #: snapshot/replay contract in docs/POLICIES.md "Learned state".
+    #: Set by :class:`LearnedPolicy`; informational for everything else.
+    learned: bool = False
 
     def __init__(self, cfg, **kwargs):
         """``cfg`` is the run's ``AdmissionConfig``; extra ``kwargs`` come
         from ``AdmissionConfig.policy_args`` (policy-specific knobs)."""
         self.cfg = cfg
-        for key in kwargs:
-            raise TypeError(f"{type(self).__name__} got unknown policy_args key {key!r}")
+        if kwargs:
+            bad = ", ".join(repr(k) for k in sorted(kwargs))
+            accepted = policy_knobs(type(self))
+            raise TypeError(
+                f"{type(self).__name__} got unknown policy_args key(s) {bad}; "
+                f"accepted knobs: {accepted if accepted else '(none)'}"
+            )
 
     # ----------------------------------------------------------- the hooks
     def queue_key(self, gid: int, ctx: PolicyContext) -> float:
@@ -368,7 +467,22 @@ class AdmissionPolicy:
         return [(s.pressure, s.index) for s in states]
 
     def observe(self, t: float, n_new: int, ctx: PolicyContext) -> None:
-        """Per-tick feed: ``n_new`` VUs became eligible at time ``t``."""
+        """Per-tick feed: ``n_new`` VUs became eligible at time ``t``.
+
+        Called once per tick *before* admission; also the only hook from
+        which learned state may be updated (drain
+        :meth:`PolicyContext.new_completions` here — see
+        :class:`LearnedPolicy` and docs/POLICIES.md "Learned state")."""
+
+    def steal_params(self) -> Tuple[float, float]:
+        """``(steal_watermark, pull_watermark)`` for this tick's steal round
+        (consulted only when ``steals`` is set).  Default: the static
+        config pair — byte-identical to the pre-hook tier.  Learned
+        stealing policies (``bandit+steal``) override this to tune the
+        hysteresis band per reward window; implementations must keep
+        ``steal_watermark >= pull_watermark`` (the no victim-and-thief
+        invariant ``AdmissionConfig`` enforces for the static pair)."""
+        return (self.cfg.steal_watermark, self.cfg.watermark)
 
     # ------------------------------------------------------------ the tick
     def admit_tick(self, t: float, ctx: PolicyContext) -> None:
@@ -476,6 +590,34 @@ def make_policy(name: str, cfg, **kwargs) -> AdmissionPolicy:
     """Instantiate a fresh policy for one run (``kwargs`` are policy knobs,
     merged from ``AdmissionConfig.policy_args`` by the admission tier)."""
     return get_policy_class(name)(cfg, **kwargs)
+
+
+def policy_knobs(cls: Type[AdmissionPolicy]) -> List[str]:
+    """The ``policy_args`` keys ``cls`` accepts, sorted.
+
+    Walks the MRO collecting every named ``__init__`` parameter (beyond
+    ``self``/``cfg`` and the ``**kwargs`` pass-through), so knobs declared
+    anywhere in an inheritance chain — e.g. ``BanditStealPolicy`` knobs
+    split across :class:`BanditPolicy` and :class:`LearnedPolicy` — are all
+    reported.  ``AdmissionConfig`` uses this to make unknown-knob errors
+    name the alternatives."""
+    knobs: List[str] = []
+    for c in cls.__mro__:
+        init = c.__dict__.get("__init__")
+        if init is None:
+            continue
+        try:
+            params = inspect.signature(init).parameters
+        except (TypeError, ValueError):  # e.g. object.__init__ slot wrapper
+            continue
+        for name, prm in params.items():
+            if name in ("self", "cfg"):
+                continue
+            if prm.kind in (prm.VAR_KEYWORD, prm.VAR_POSITIONAL):
+                continue
+            if name not in knobs:
+                knobs.append(name)
+    return sorted(knobs)
 
 
 # ------------------------------------------------- the ported three
@@ -739,3 +881,246 @@ class PredictivePolicy(AdmissionPolicy):
 
     def want_pull(self, state: ShardState) -> bool:
         return state.pressure < self._watermark
+
+
+# ------------------------------------------------- the learned tier
+class LearnedPolicy(AdmissionPolicy):
+    """Shared machinery for policies with learned state (ROADMAP item 5).
+
+    The windowed fold/record/replay discipline (normative in
+    docs/POLICIES.md "Learned state"):
+
+    * :meth:`observe` buffers the completion feed
+      (:meth:`PolicyContext.new_completions`) every tick; learned state
+      mutates **only at window boundaries** — every ``update_every``-th
+      tick the buffered window is folded (:meth:`fold`), so between
+      boundaries every decision reads a constant state.
+    * with ``record_state=True`` the policy appends a full state snapshot
+      (:meth:`state_snapshot` — pure JSON types) after each boundary;
+      ``AdmissionSimulator.run`` surfaces the list as
+      ``AdmissionRun.policy_state``.
+    * with ``replay_from=<recorded snapshots>`` the policy **restores** the
+      recorded snapshot at each boundary instead of folding.  Because a
+      complete snapshot reproduces the recorded post-fold state exactly,
+      a replayed run is byte-identical to its recording — which is
+      precisely the test that snapshots capture *all* decision-relevant
+      state (``tests/test_replay.py`` pins it).
+
+    ``policy_args`` (shared by every learned policy): ``update_every``
+    (ticks per window; default 8), ``record_state``, ``replay_from``.
+    """
+
+    learned = True
+
+    def __init__(
+        self,
+        cfg,
+        update_every: int = 8,
+        record_state: bool = False,
+        replay_from: Optional[Sequence[Mapping]] = None,
+        **kwargs,
+    ):
+        super().__init__(cfg, **kwargs)
+        if int(update_every) < 1:
+            raise ValueError("update_every must be >= 1")
+        self.update_every = int(update_every)
+        self.record_state = bool(record_state)
+        self._replay = None if replay_from is None else list(replay_from)
+        #: post-boundary state snapshots (filled when ``record_state``)
+        self.snapshots: List[dict] = []
+        self._pending: List[Completion] = []
+        self._ticks = 0
+        self._windows = 0
+
+    def observe(self, t: float, n_new: int, ctx: PolicyContext) -> None:
+        self._pending.extend(ctx.new_completions())
+        self._ticks += 1
+        if self._ticks % self.update_every == 0:
+            self._advance_window()
+
+    def _advance_window(self) -> None:
+        w = self._windows
+        self._windows += 1
+        if self._replay is not None:
+            if w >= len(self._replay):
+                raise IndexError(
+                    f"replay_from carries {len(self._replay)} snapshots but "
+                    f"the run reached window {w} — a replay must share the "
+                    "recording's workload, duration and update_every"
+                )
+            self.restore_state(self._replay[w])
+        else:
+            self.fold(tuple(self._pending))
+        self._pending.clear()
+        if self.record_state:
+            self.snapshots.append(self.state_snapshot())
+
+    # ---------------------------------------------- subclass obligations
+    def fold(self, completions: Tuple[Completion, ...]) -> None:
+        """Fold one window of completions into the learned state."""
+        raise NotImplementedError
+
+    def state_snapshot(self) -> dict:
+        """Full learned state as pure JSON types (the snapshot contract)."""
+        raise NotImplementedError
+
+    def restore_state(self, snap: Mapping) -> None:
+        """Replace learned state with a recorded snapshot."""
+        raise NotImplementedError
+
+
+@register_policy
+class SjfPolicy(LearnedPolicy):
+    """Shortest-predicted-job-first admission (learned SJF).
+
+    The global queue is ordered by each VU's **predicted total service
+    time**: ``n_calls * sum(freq_f * predict_ms(f))`` over the VU's
+    function-call mix (``PolicyContext.func_profile``), with predictions
+    from an online per-function Welford duration estimator
+    (``core.estimators.DurationEstimator``) fed by the completion stream.
+    During a backlog the quick interactive VUs jump the long batch VUs —
+    the mean-latency/SJF result Przybylski et al. obtain from per-function
+    execution-time estimates — while shard selection stays
+    pressure-ordered.  Before any observation the estimator predicts
+    ``prior_ms`` for everything and the queue degrades to FIFO.
+
+    Queue keys are computed at *enqueue* time (heap invariant), from the
+    estimator state as of the last window boundary — constant between
+    boundaries, so keys are replay-stable.
+
+    ``policy_args``: ``prior_ms`` (pre-observation prediction, ms; default
+    500 — the scale of a cold-started request, so early admissions aren't
+    falsely scored short) plus the :class:`LearnedPolicy` knobs.
+    """
+
+    name = "sjf"
+    orders_queue = True
+
+    def __init__(self, cfg, prior_ms: float = 500.0, **kwargs):
+        super().__init__(cfg, **kwargs)
+        self.estimator = DurationEstimator(prior_ms=prior_ms)
+
+    def fold(self, completions: Tuple[Completion, ...]) -> None:
+        est = self.estimator
+        for c in completions:
+            est.update(c.func, c.duration_ms)
+
+    def state_snapshot(self) -> dict:
+        return {"estimator": self.estimator.snapshot()}
+
+    def restore_state(self, snap: Mapping) -> None:
+        self.estimator.restore(snap["estimator"])
+
+    def queue_key(self, gid: int, ctx: PolicyContext) -> float:
+        prof = ctx.func_profile(gid)
+        n_calls = len(ctx.programs[gid].func_idx)
+        predict = self.estimator.predict_ms
+        return n_calls * sum(freq * predict(f) for f, freq in prof)
+
+
+@register_policy
+class BanditPolicy(LearnedPolicy):
+    """Bandit-tuned pull watermark (model-free adaptive thresholds).
+
+    Arms are watermark multipliers; each reward window (``update_every``
+    ticks) scores the *current* arm by the requests that completed in the
+    window — ``reward = -(p99_window_ms / 1e3 + cold_weight * cold_rate)``,
+    the p99 + cold-rate blend — then a :class:`~repro.core.estimators
+    .BanditTuner` (UCB1, or seeded epsilon-greedy with counter-based
+    draws) picks the next arm.  ``want_pull`` gates on ``cfg.watermark *
+    current_arm``: low arms throttle admission (fewer cold starts, longer
+    queue wait), high arms drain the queue eagerly — the bandit learns the
+    trade per scenario instead of hand-tuning it (Nguyen et al.'s adaptive
+    sizing, without the model).  Windows with no completions feed no
+    reward (an empty window says nothing about the arm).
+
+    Arms may also be ``(watermark_mult, steal_mult)`` pairs — scalars are
+    normalized to ``(mult, 1.0)``; the steal member only matters under
+    :class:`BanditStealPolicy`.
+
+    ``policy_args``: ``arms`` (default ``(0.6, 1.0, 1.6, 2.4)``), ``mode``
+    (``"ucb"``/``"egreedy"``), ``epsilon``, ``ucb_c``, ``bandit_seed``,
+    ``cold_weight`` plus the :class:`LearnedPolicy` knobs.
+    """
+
+    name = "bandit"
+
+    DEFAULT_ARMS: Tuple = (0.6, 1.0, 1.6, 2.4)
+
+    def __init__(
+        self,
+        cfg,
+        arms: Optional[Sequence] = None,
+        mode: str = "ucb",
+        epsilon: float = 0.1,
+        ucb_c: float = 0.5,
+        bandit_seed: int = 0,
+        cold_weight: float = 1.0,
+        **kwargs,
+    ):
+        super().__init__(cfg, **kwargs)
+        if cold_weight < 0:
+            raise ValueError("cold_weight must be >= 0")
+        self.cold_weight = float(cold_weight)
+        pairs = []
+        for a in arms if arms is not None else self.DEFAULT_ARMS:
+            if isinstance(a, (tuple, list)):
+                wm, sm = (float(a[0]), float(a[1]))
+            else:
+                wm, sm = float(a), 1.0
+            if wm <= 0 or sm <= 0:
+                raise ValueError(f"arm multipliers must be > 0, got {a!r}")
+            if self.steals and cfg.steal_watermark * sm < cfg.watermark * wm:
+                raise ValueError(
+                    f"arm {a!r} puts the effective steal watermark "
+                    f"({cfg.steal_watermark * sm:g}) below the effective pull "
+                    f"watermark ({cfg.watermark * wm:g}) — a shard must never "
+                    "be steal victim and pull thief at once"
+                )
+            pairs.append((wm, sm))
+        self.tuner = BanditTuner(
+            tuple(pairs), mode=mode, epsilon=epsilon, ucb_c=ucb_c,
+            seed=bandit_seed,
+        )
+
+    def fold(self, completions: Tuple[Completion, ...]) -> None:
+        if not completions:
+            return  # empty window: no evidence, no reward
+        durs = sorted(c.duration_ms for c in completions)
+        p99 = durs[min(len(durs) - 1, int(0.99 * len(durs)))]
+        cold_rate = sum(1 for c in completions if c.cold) / len(completions)
+        self.tuner.feed(-(p99 / 1e3 + self.cold_weight * cold_rate))
+
+    def state_snapshot(self) -> dict:
+        return {"tuner": self.tuner.snapshot()}
+
+    def restore_state(self, snap: Mapping) -> None:
+        self.tuner.restore(snap["tuner"])
+
+    def want_pull(self, state: ShardState) -> bool:
+        return state.pressure < self.cfg.watermark * self.tuner.current[0]
+
+
+@register_policy
+class BanditStealPolicy(BanditPolicy):
+    """Bandit tuning the **(pull, steal) watermark pair** jointly.
+
+    Same reward loop as ``bandit``, with stealing on and two-dimensional
+    arms: each ``(watermark_mult, steal_mult)`` arm sets both the pull gate
+    (``cfg.watermark * watermark_mult``) and the steal round's hysteresis
+    band via :meth:`steal_params` (``cfg.steal_watermark * steal_mult``
+    over the scaled pull watermark).  Construction rejects any arm whose
+    effective steal watermark falls below its effective pull watermark, so
+    the no victim-and-thief invariant holds on every arm.
+    """
+
+    name = "bandit+steal"
+    steals = True
+
+    DEFAULT_ARMS: Tuple = (
+        (0.6, 1.0), (1.0, 1.0), (1.6, 1.2), (1.0, 0.7), (1.6, 1.6),
+    )
+
+    def steal_params(self) -> Tuple[float, float]:
+        wm, sm = self.tuner.current
+        return (self.cfg.steal_watermark * sm, self.cfg.watermark * wm)

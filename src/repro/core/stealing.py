@@ -82,7 +82,11 @@ def steal_tick(
             the same move.
         pull_watermark: pressure below which a shard may receive (the
             admission tier's pull watermark — stealing is admission's
-            mirror image).
+            mirror image).  The admission loop sources this pair from
+            ``AdmissionPolicy.steal_params()`` each tick, so learned
+            policies (``bandit+steal``) may retune the band per reward
+            window — the invariant above must hold for every value the
+            policy can return.
         inv_workers: per-shard ``1 / n_workers`` pressure increments.
         t: simulated re-injection time (default: each receiver's clock).
         max_moves: optional hard cap on migrations this tick.

@@ -36,7 +36,7 @@ just not per-VU regenerable).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -71,6 +71,10 @@ class Scenario:
     (injected failure/recovery schedule) so a chaos scenario travels as one
     replayable bundle; ``run_kwargs`` forwards it only when set, keeping
     plain scenarios byte-identical to their pre-chaos form.
+
+    ``axes`` names the metric columns this scenario is scored on in the
+    policy leaderboard (``benchmarks/bench_policies`` cell keys: p99_ms,
+    mean_ms, deadline_miss_rate, cold_rate); lower is better on every axis.
     """
 
     name: str
@@ -78,6 +82,9 @@ class Scenario:
     arrivals: np.ndarray
     deadlines: Optional[np.ndarray] = None
     faults: Optional[object] = None  # chaos.FaultPlan; object to avoid a cycle
+    axes: Tuple[str, ...] = (
+        "p99_ms", "mean_ms", "deadline_miss_rate", "cold_rate"
+    )
 
     @property
     def n_vus(self) -> int:

@@ -545,3 +545,81 @@ def test_drain_ordering_oldest_outage_first_across_dark_ticks():
         for src, sv in left2
     ]
     assert all(mv.dst == 2 for mv in moves)
+
+
+# ------------------------------------ learned state under active faults
+def test_learned_completion_feed_exactly_once_under_shard_kill():
+    """A learned policy's completion feed, with a correlated shard-kill
+    plan active and salvage re-homing VUs mid-run: every merged request
+    record is observed by the policy exactly once — salvaged VUs (which
+    complete later work on a *new* shard under a fresh local id) are never
+    double-counted and never dropped by the per-shard cursors."""
+    from collections import Counter
+
+    from repro.core.policies import SjfPolicy, register_policy, unregister_policy
+
+    class ProbeSjf(SjfPolicy):
+        name = "probe_sjf"
+        seen = []  # every completion handed to fold, across windows
+
+        def __init__(self, cfg, **kw):
+            # update_every=1: every tick's drain folds immediately, so
+            # `seen` is exactly what the feed delivered over the whole run
+            super().__init__(cfg, update_every=1, **kw)
+
+        def fold(self, completions):
+            type(self).seen.extend(completions)
+            super().fold(completions)
+
+    register_policy(ProbeSjf)
+    try:
+        run, _ = _chaos_cell("probe_sjf")
+        seen = ProbeSjf.seen
+        assert run.n_salvages > 0  # the kill bit: VUs really moved shards
+        assert len(seen) == len(run.records)
+        got = Counter((c.gid, c.func) for c in seen)
+        want = Counter(zip(run.records.vu.tolist(), run.records.func.tolist()))
+        assert got == want  # same multiset: exactly once, nothing doubled
+        assert all(
+            c.duration_ms > 0 and np.isfinite(c.duration_ms) for c in seen
+        )
+        # the salvaged VUs' post-move completions were observed too
+        moved = {run.shards[mv.dst].admitted[mv.dst_vu] for mv in run.salvages}
+        assert moved & {c.gid for c in seen}
+    finally:
+        unregister_policy("probe_sjf")
+        ProbeSjf.seen.clear()
+
+
+@pytest.mark.parametrize("policy", ["sjf", "bandit", "bandit+steal"])
+def test_learned_policies_deterministic_under_shard_kill(policy):
+    """Learned state folding + an active fault plan must still be a pure
+    function of the run: two identical chaos runs agree byte-for-byte on
+    records AND on the recorded per-window policy snapshots."""
+    import warnings
+
+    from benchmarks.bench_chaos import QUICK as P
+    from benchmarks.bench_chaos import make_plan
+
+    def one():
+        funcs = make_functions(seed=0)
+        scn = make_scenario("on_off", funcs, P["n_vus"], P["duration_s"],
+                            seed=0)
+        scn = dataclasses.replace(scn, faults=make_plan("shard_kill", P, seed=0))
+        adm = AdmissionSimulator(
+            P["n_shards"], P["n_workers"], scheduler="hiku",
+            cfg=SimConfig(mem_pool_mb=P["mem_pool_mb"]), seed=0,
+            admission=AdmissionConfig(
+                policy=policy, steal_watermark=1.25,
+                policy_args={"record_state": True},
+            ),
+        )
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            return adm.run(scn.n_vus, P["duration_s"], **scn.run_kwargs())
+
+    r1 = one()
+    r2 = one()
+    assert r1.n_salvages > 0
+    assert r1.records.equals(r2.records)
+    assert r1.policy_state and r1.policy_state == r2.policy_state

@@ -62,6 +62,7 @@ from .jax_sched import (
     JIQState,
     init_state,
     sched_many,
+    sched_many_adaptive,
     sched_many_fused,
     sched_step,
 )
@@ -92,7 +93,7 @@ from .shard import (
     StreamChunk,
     shard_seed,
 )
-from .simulator import SalvagedVU, SimConfig, Simulator, StolenTask
+from .simulator import BurstDetector, SalvagedVU, SimConfig, Simulator, StolenTask
 from .stealing import Migration, Salvage, drain_tick, steal_tick
 from .trace import FunctionSpec, default_n_events, make_functions, make_vu_programs
 from .workloads import Scenario, available_scenarios, make_scenario
@@ -105,6 +106,7 @@ __all__ = [
     "AdmissionShard",
     "AdmissionSimulator",
     "BanditTuner",
+    "BurstDetector",
     "DurationEstimator",
     "EVICT",
     "FINISH",
@@ -150,6 +152,7 @@ __all__ = [
     "replay_shards",
     "rolling_restart",
     "sched_many",
+    "sched_many_adaptive",
     "sched_many_fused",
     "sched_step",
     "scripts_from_run",

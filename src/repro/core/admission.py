@@ -67,6 +67,7 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .coord import ShardCoordinator
 from .metrics import RunMetrics, summarize
 from .policies import PolicyContext, get_policy_class, make_policy, policy_knobs
 from .records import RecordColumns
@@ -619,6 +620,12 @@ class AdmissionSimulator:
             arrivals=arr,
             deadlines=dl,
         )
+        # change-driven cluster view (docs/ARCHITECTURE.md §13): every shard
+        # publishes a dirty flag on state change; refresh() below re-reads
+        # only those shards, and the heap/steal/drain consumers run off the
+        # cached deltas — byte-identical decisions at O(dirty) per tick
+        coord = ShardCoordinator(sims)
+        ctx.coord = coord
         qpos = 0
         queue_t: List[float] = []
         queue_depth: List[int] = []
@@ -628,6 +635,7 @@ class AdmissionSimulator:
         t = 0.0
         t0 = time.perf_counter()
         while True:
+            coord.refresh()  # drain the dirty set: the tick's cached view
             n_new = 0
             while qpos < n_vus and arr[order[qpos]] <= t:
                 ctx.enqueue(int(order[qpos]))
@@ -640,12 +648,15 @@ class AdmissionSimulator:
                     if tn <= t < until:
                         doomed[k] += 1
                 ctx.doomed = doomed
-            if adm.salvage and t < duration_s:
+            if adm.salvage and t < duration_s and (coord.dead or salvage_buf):
                 # dead-shard drain BEFORE fresh admissions: recovered work
                 # re-enters the cluster ahead of new arrivals (§10 salvage
-                # ordering), binding to the least-pressured live shards
+                # ordering), binding to the least-pressured live shards.
+                # Skipped outright while no shard is dead and nothing is
+                # buffered — the drain would scan and return empty anyway.
                 moves, salvage_buf = drain_tick(
-                    sims, self.inv_workers, t, pending=salvage_buf
+                    sims, self.inv_workers, t, pending=salvage_buf,
+                    dead=coord.dead, pressures=coord.pressure,
                 )
                 for mv in moves:
                     gid = admitted[mv.src][mv.src_vu]
@@ -661,15 +672,30 @@ class AdmissionSimulator:
                 # stealing policies (bandit+steal) can tune the band per
                 # window (default: the static config pair, byte-identical)
                 steal_wm, pull_wm = policy.steal_params()
-                moves = steal_tick(
-                    sims,
-                    steal_watermark=steal_wm,
-                    pull_watermark=pull_wm,
-                    inv_workers=self.inv_workers,
-                    t=t,
-                    max_moves=adm.steal_batch,
-                    prefer_warm=policy.steal_affinity,
-                )
+                if steal_wm < pull_wm:  # the steal_tick invariant, kept
+                    raise ValueError(  # loud even on skipped quiet ticks
+                        f"steal_watermark {steal_wm} must be >= pull "
+                        f"watermark {pull_wm} (a shard must never be victim "
+                        "and thief at once)"
+                    )
+                # O(dirty) victim probe: with every cached pressure at or
+                # below the steal watermark no shard qualifies as victim,
+                # so the whole round is a guaranteed no-op — skip it.
+                # (Admissions this tick never raise *live* pressure — they
+                # only schedule submit events — so the cache is current.)
+                if coord.pressure_max() > steal_wm:
+                    moves = steal_tick(
+                        sims,
+                        steal_watermark=steal_wm,
+                        pull_watermark=pull_wm,
+                        inv_workers=self.inv_workers,
+                        t=t,
+                        max_moves=adm.steal_batch,
+                        prefer_warm=policy.steal_affinity,
+                        pressures=coord.pressure,
+                    )
+                else:
+                    moves = []
                 for mv in moves:
                     gid = admitted[mv.src][mv.src_vu]
                     assert mv.dst_vu == len(admitted[mv.dst])
@@ -683,7 +709,11 @@ class AdmissionSimulator:
             tick += 1
             t = tick * adm.tick_s  # drift-free, like _stream_windows
             for sim in sims:
-                sim.step_until(t)
+                # frontier skip: a shard with nothing scheduled inside the
+                # tick would pop no events (and never advance its clock), so
+                # the call is a no-op — one O(1) peek instead
+                if sim.next_event_time() <= t:
+                    sim.step_until(t)
         wall_s = time.perf_counter() - t0
         run = self._merge(
             sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
@@ -692,28 +722,6 @@ class AdmissionSimulator:
         if getattr(policy, "record_state", False):
             run.policy_state = list(policy.snapshots)
         return run
-
-    def _pull_tick(self, t, sims, programs, waiting, admitted, admit_t, pulls) -> None:
-        """One watermark-pull admission round over an externally supplied
-        FIFO queue (``collections.deque`` of global VU ids).
-
-        Legacy direct-drive entry point, kept for tests and ad-hoc drivers;
-        the run loop itself dispatches through ``core.policies`` — this shim
-        runs the registry's ``pull`` policy for a single tick, which is the
-        original pressure-heap round byte-for-byte."""
-        policy = make_policy("pull", self.admission)
-        ctx = PolicyContext(
-            sims=sims,
-            programs=programs,
-            worker_split=self.worker_split,
-            inv_workers=self.inv_workers,
-            admitted=admitted,
-            admit_t=admit_t,
-            pulls=pulls,
-            policy=policy,
-        )
-        ctx.waiting = waiting  # adopt the caller's queue in place
-        policy.admit_tick(t, ctx)
 
     def _merge(
         self, sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,

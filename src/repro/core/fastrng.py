@@ -44,7 +44,14 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-__all__ = ["lognormal_matrix", "learn_tables", "selftest", "write_tables"]
+__all__ = [
+    "lognormal_matrix",
+    "uniform_block",
+    "learn_tables",
+    "selftest",
+    "selftest_uniform",
+    "write_tables",
+]
 
 _TABLE_PATH = Path(__file__).with_name("zig_tables.json")
 
@@ -173,6 +180,85 @@ def _first_uint64(seed: int, vu: np.ndarray, ev: np.ndarray):
     sh, sl, inch, incl = _init_state(seed, vu, ev)
     sh, sl = _pcg_step(sh, sl, inch, incl)  # advance consumed by the draw
     return _pcg_output(sh, sl)
+
+
+# --------------------------------------------------- per-VU uniform streams
+# next_double() for PCG64: (next_uint64 >> 11) * 2**-53.
+_DOUBLE_SCALE = 1.0 / 9007199254740992.0
+_U64_11 = np.uint64(11)
+
+_SELFTEST_U_OK: Optional[bool] = None
+
+
+def _init_state2(seed: int, vu: np.ndarray):
+    """Freshly seeded PCG64 state for ``default_rng((seed, vu))``.
+
+    The 2-word-entropy sibling of :func:`_init_state` (same SeedSequence
+    pool mixing — entropy shorter than the pool takes the identical
+    schedule), used for whole per-VU *streams* rather than one draw.
+    """
+    w = (np.asarray(seed, np.uint32), vu.astype(np.uint32))
+    v0, v1, v2, v3 = _seedseq_state4(w)
+    inch = (v2 << _U64_1) | (v3 >> _U64_63)
+    incl = (v3 << _U64_1) | _U64_1
+    sl = incl + v1
+    carry = (sl < incl).astype(np.uint64)
+    sh = inch + v0 + carry
+    return _pcg_step(sh, sl, inch, incl) + (inch, incl)
+
+
+def _uniform_block_impl(seed: int, n_vus: int, n_draws: int, vu_start: int = 0) -> np.ndarray:
+    vu = np.arange(vu_start, vu_start + n_vus, dtype=np.uint32)
+    sh, sl, inch, incl = _init_state2(seed, vu)
+    out = np.empty((n_draws, n_vus))
+    for _ in range(n_draws):
+        sh, sl = _pcg_step(sh, sl, inch, incl)
+        out[_] = (_pcg_output(sh, sl) >> _U64_11) * _DOUBLE_SCALE
+    return np.ascontiguousarray(out.T)
+
+
+def _slow_uniform_block(seed: int, n_vus: int, n_draws: int, vu_start: int = 0) -> np.ndarray:
+    return np.array(
+        [
+            np.random.default_rng((seed, v)).random(n_draws)
+            for v in range(vu_start, vu_start + n_vus)
+        ]
+    ).reshape(n_vus, n_draws)
+
+
+def selftest_uniform(n: int = 64) -> bool:
+    """Cross-check :func:`uniform_block` against per-VU ``default_rng`` once.
+
+    Cached; on mismatch every subsequent ``uniform_block`` call takes the
+    per-VU slow path (still bit-exact, just not fast)."""
+    global _SELFTEST_U_OK
+    if _SELFTEST_U_OK is None:
+        try:
+            got = _uniform_block_impl(192837, 8, n, vu_start=3)
+            want = _slow_uniform_block(192837, 8, n, vu_start=3)
+            _SELFTEST_U_OK = bool(np.array_equal(got, want))
+        except Exception:
+            _SELFTEST_U_OK = False
+    return _SELFTEST_U_OK
+
+
+def uniform_block(seed: int, n_vus: int, n_draws: int, vu_start: int = 0) -> np.ndarray:
+    """(n_vus, n_draws) matrix whose row ``i`` is bit-identical to
+    ``np.random.default_rng((seed, vu_start + i)).random(n_draws)``.
+
+    These raw doubles are the substrate for any per-VU seeded draw sequence
+    (``trace.make_vu_programs`` rebuilds its weighted choices and think
+    times from them); vectorizing the PCG64 streams removes the per-VU
+    ``Generator`` construction that dominates workload generation at
+    mega-VU scale."""
+    if n_vus <= 0 or n_draws <= 0:
+        return np.zeros((max(n_vus, 0), max(n_draws, 0)))
+    seed = int(seed)
+    if not (0 <= seed < 2**32) or not selftest_uniform():
+        if 0 <= seed < 2**32:
+            _warn_fallback_once()
+        return _slow_uniform_block(seed, n_vus, n_draws, vu_start=vu_start)
+    return _uniform_block_impl(seed, n_vus, n_draws, vu_start=vu_start)
 
 
 # ------------------------------------------------------------------- tables

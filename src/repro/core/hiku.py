@@ -121,6 +121,7 @@ class HikuScheduler(Scheduler):
         self.total_conns += cw - old
         if worker < len(self._conns_arr):
             self._conns_arr[worker] = cw
+        self._lc_move(worker, cw)
         # decrease-key: re-post an accurate entry in every queue holding the
         # worker, so the lowered priority is visible to future dequeues
         # (func itself is covered by the unconditional enqueue push below)

@@ -181,6 +181,63 @@ def sched_many_fused(
     return JIQState(idle, conns), (ws_all, warm_all)
 
 
+def sched_many_adaptive(
+    state: JIQState,
+    events: jax.Array,
+    detector,
+    densities=None,
+    segment: int = 1024,
+    key: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> Tuple[JIQState, Tuple[jax.Array, jax.Array]]:
+    """Burst-adaptive fused dispatch: ``sched_many`` with per-window chunk
+    sizes chosen by a :class:`~repro.core.simulator.BurstDetector`.
+
+    Walks the stream in ``segment``-event windows.  Before each window, one
+    density sample is folded into ``detector`` (``densities[i]`` when given
+    — e.g. ``Simulator.heap_density`` readings taken ahead of the clock —
+    else the window's own event count, a pure stream-rate proxy) and the
+    detector's answer picks the dispatch path: ``chunk == 1`` steps the
+    window through the ``lax.scan`` path (sparse streams never pay
+    kernel-launch padding for mostly-empty chunks), anything larger fuses
+    the window through :func:`sched_many_fused` with that chunk.
+
+    The detector is a pure observer — event order is untouched — so the
+    result is **bitwise equal** to ``sched_many(state, events)`` for every
+    detector state and density sequence (pinned in tests/test_scheduler.py).
+    With a PRNG ``key`` (randomized tie-breaks live in the scan path) the
+    whole stream takes the scan path unchanged.
+    """
+    if key is not None:
+        return sched_many(state, events, key)
+    if segment < 1:
+        raise ValueError(f"segment must be >= 1, got {segment}")
+    n = events.shape[0]
+    n_windows = -(-n // segment)
+    if densities is not None and len(densities) < n_windows:
+        raise ValueError(
+            f"densities has {len(densities)} samples for {n_windows} windows"
+        )
+    ws, warms = [], []
+    for i in range(n_windows):
+        ev = events[i * segment : (i + 1) * segment]
+        sample = float(densities[i]) if densities is not None else float(ev.shape[0])
+        chunk = detector.observe(sample)
+        if chunk <= 1:
+            state, (a, warm) = sched_many(state, ev, None)
+        else:
+            state, (a, warm) = sched_many_fused(
+                state, ev, chunk=chunk, interpret=interpret
+            )
+        ws.append(a)
+        warms.append(warm)
+    ws_all = jnp.concatenate(ws) if ws else jnp.zeros((0,), jnp.int32)
+    warm_all = (
+        jnp.concatenate(warms).astype(bool) if warms else jnp.zeros((0,), bool)
+    )
+    return state, (ws_all, warm_all)
+
+
 # ---------------------------------------------------------------- invariants
 def check_invariants(state: JIQState) -> bool:
     """Structural invariants used by property tests."""

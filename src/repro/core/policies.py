@@ -226,6 +226,12 @@ class PolicyContext:
         self._arrivals = arrivals
         self._deadlines = deadlines
         self.total_workers = sum(self.worker_split)
+        #: the run's ShardCoordinator (set by the admission loop).  When
+        #: present, the default ``admit_tick`` consumes its persistent
+        #: pressure heap instead of rebuilding one per tick — byte-identical
+        #: decisions at O(dirty) coordination cost (docs/ARCHITECTURE.md
+        #: §13).  ``None`` under direct PolicyContext construction (tests).
+        self.coord = None
         # FIFO deque by default; a min-heap of (queue_key, arrival_seq, gid)
         # when the policy orders the queue (EDF et al.)
         self._ordered = bool(policy.orders_queue)
@@ -494,7 +500,23 @@ class AdmissionPolicy:
         :meth:`want_pull`, with the ``1/n_workers`` effective-pressure
         accounting per binding.  Policies that aren't heap-shaped
         (``round_robin``) override the whole tick.
+
+        When the admission loop supplies a ``ShardCoordinator``
+        (``ctx.coord``) and the policy keeps the default pressure ranking
+        with no warm-signal snapshots, the tick runs against the
+        coordinator's *persistent* lazy-deletion heap instead of rebuilding
+        a K-entry heap from live engine reads — byte-identical decisions
+        (the valid-entry multiset equals the rebuilt heap's; see
+        docs/ARCHITECTURE.md §13) at O(dirty) coordination cost.
         """
+        if (
+            ctx.coord is not None
+            and type(self).rank_shards is AdmissionPolicy.rank_shards
+            and not self.uses_warm_capacity
+            and not self.uses_warm_digest
+        ):
+            self._admit_tick_incremental(t, ctx)
+            return
         cfg = self.cfg
         inv = ctx.inv_workers
         K = ctx.n_shards
@@ -539,6 +561,56 @@ class AdmissionPolicy:
                 heapq.heappop(heap)  # per-shard cap reached this tick
             else:
                 heapq.heapreplace(heap, (key + inv[k], k))
+
+    def _admit_tick_incremental(self, t: float, ctx: PolicyContext) -> None:
+        """The default admission round against the coordinator's persistent
+        heap (``ctx.coord``) — the O(dirty) twin of the rebuild loop above.
+
+        Correspondence with the rebuild loop, entry by entry: at tick start
+        every shard holds exactly one valid entry keyed at its cached
+        pressure — the same multiset the rebuild heapifies, because a shard
+        whose pressure changed was dirty and ``refresh()`` pushed a
+        superseding entry.  An admission replaces the shard's entry at
+        ``key + inv`` (the rebuild's ``heapreplace``); a decline or a
+        batch-cap pop *parks* the shard — its entry is removed for the rest
+        of the tick, exactly like the rebuild's ``heappop`` — and parked
+        shards are re-posted at their cached base pressure when the tick
+        ends, so next tick starts from the full multiset again.  (A parked
+        shard that admitted this tick is dirty, so the re-post is
+        superseded by the next ``refresh()`` before anyone reads it.)
+        """
+        cfg = self.cfg
+        coord = ctx.coord
+        inv = ctx.inv_workers
+        tick_pulls: Dict[int, int] = {}
+        nan = float("nan")  # warm signals unrequested on this path
+
+        parked: List[int] = []
+        try:
+            while ctx.waiting_n:
+                top = coord.peek()
+                if top is None:
+                    break  # every shard declined or capped this tick
+                key, k = top
+                state = ctx.shard_state(
+                    k, t, pressure=key, warm=nan,
+                    tick_pulls=tick_pulls.get(k, 0), digest=None,
+                )
+                if not self.want_pull(state):
+                    coord.pop()  # shard declines: done for this tick
+                    parked.append(k)
+                    continue
+                ctx.admit_next(k, t)
+                pulls = tick_pulls.get(k, 0) + 1
+                tick_pulls[k] = pulls
+                coord.pop()
+                if cfg.batch_size is not None and pulls >= cfg.batch_size:
+                    parked.append(k)  # per-shard cap reached this tick
+                else:
+                    coord.push(key + inv[k], k)
+        finally:
+            for k in parked:
+                coord.push(coord.pressure[k], k)
 
 
 # --------------------------------------------------------------- registry

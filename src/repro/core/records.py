@@ -315,3 +315,130 @@ class RecordAccumulator:
     def clear(self) -> None:
         for name in self.__slots__:
             getattr(self, name).clear()
+
+
+# -------------------------------------------------- shared-memory transport
+# One POSIX shared-memory segment per shard result: the packed REC_DTYPE
+# record rows, then the float64 assignment times, then the int64 assignment
+# worker ids (each section 8-byte aligned).  A shard child writes its columns
+# straight into the segment and ships only the (name, row counts) metadata
+# through the process pool; the parent reattaches and copies the columns out
+# in one memcpy per section instead of pickling object graphs.
+#
+# Lifetime contract (docs/ARCHITECTURE.md §13; pinned by
+# tests/test_records_shm.py and the leak check in tests/test_shard.py):
+# segments are *explicitly* managed — both sides immediately detach the
+# segment from Python's ``resource_tracker`` (whose exit-time cleanup is
+# process-scoped and double-unlinks under fork pools) and the pool driver
+# unlinks every segment it named in a ``finally``, so a writer crash before
+# the merge leaves nothing behind in ``/dev/shm``.
+
+def shm_layout(n_rec: int, n_asg: int) -> "tuple[int, int, int]":
+    """``(assign_t offset, assign_w offset, total bytes)`` of a segment
+    holding ``n_rec`` records and ``n_asg`` assignments.  Offsets are
+    8-byte aligned so the float64/int64 views are aligned regardless of the
+    packed record section's odd itemsize."""
+    at_off = -(-(n_rec * REC_DTYPE.itemsize) // 8) * 8
+    aw_off = at_off + 8 * n_asg
+    return at_off, aw_off, aw_off + 8 * n_asg
+
+
+def _untrack_shm(shm) -> None:
+    """Detach a segment from ``resource_tracker`` exit-time cleanup: this
+    module owns segment lifetime explicitly (create/attach both register on
+    Python <= 3.12, so without this every attaching process unlinks the
+    segment again at exit)."""
+    from multiprocessing import resource_tracker
+
+    try:
+        resource_tracker.unregister(shm._name, "shared_memory")
+    except Exception:
+        pass  # tracker already gone (interpreter teardown) — nothing to undo
+
+
+def write_columns_shm(
+    name: str, records: RecordColumns, assign_t, assign_w
+) -> "Union[str, None]":
+    """Create segment ``name`` and fill it with one shard's columns.
+
+    Writes each column directly into an aligned view over the segment (one
+    memcpy per column, no intermediate structured array) and detaches the
+    mapping before returning.  Returns ``name``, or ``None`` without
+    creating anything when there are no rows at all (POSIX shm rejects
+    zero-byte segments, and there is nothing to ship)."""
+    from multiprocessing import shared_memory
+
+    assign_t = np.asarray(assign_t, np.float64)
+    assign_w = np.asarray(assign_w, np.int64)
+    n_rec, n_asg = len(records), len(assign_t)
+    if len(assign_w) != n_asg:
+        raise ValueError("assign_t/assign_w length mismatch")
+    at_off, aw_off, total = shm_layout(n_rec, n_asg)
+    if total == 0:
+        return None
+    shm = shared_memory.SharedMemory(name=name, create=True, size=total)
+    try:
+        _untrack_shm(shm)
+        if n_rec:
+            rows = np.ndarray(n_rec, dtype=REC_DTYPE, buffer=shm.buf)
+            for field in _FIELDS:
+                rows[field] = getattr(records, field)
+            del rows  # release the buffer export before close()
+        if n_asg:
+            np.ndarray(n_asg, np.float64, buffer=shm.buf, offset=at_off)[:] = assign_t
+            np.ndarray(n_asg, np.int64, buffer=shm.buf, offset=aw_off)[:] = assign_w
+    finally:
+        shm.close()
+    return name
+
+
+def read_columns_shm(
+    name: str, n_rec: int, n_asg: int
+) -> "tuple[RecordColumns, np.ndarray, np.ndarray]":
+    """Attach segment ``name``, copy its columns out, and detach.
+
+    The returned arrays own their memory (one memcpy per section), so the
+    caller may unlink the segment immediately.  Row counts travel out of
+    band (the shipment metadata) — the segment itself is headerless."""
+    from multiprocessing import shared_memory
+
+    at_off, aw_off, _total = shm_layout(n_rec, n_asg)
+    shm = shared_memory.SharedMemory(name=name)
+    try:
+        _untrack_shm(shm)
+        if n_rec:
+            rows = np.empty(n_rec, REC_DTYPE)
+            rows[:] = np.ndarray(n_rec, dtype=REC_DTYPE, buffer=shm.buf)
+            cols = RecordColumns.from_structured(rows)
+        else:
+            cols = RecordColumns.empty()
+        if n_asg:
+            at = np.array(np.ndarray(n_asg, np.float64, buffer=shm.buf, offset=at_off))
+            aw = np.array(np.ndarray(n_asg, np.int64, buffer=shm.buf, offset=aw_off))
+        else:
+            at, aw = np.zeros(0, np.float64), np.zeros(0, np.int64)
+        return cols, at, aw
+    finally:
+        shm.close()
+
+
+def unlink_columns_shm(name: "Union[str, None]") -> None:
+    """Remove segment ``name`` if it exists (idempotent crash-safe cleanup:
+    attach, detach from the tracker, unlink; a missing segment — never
+    created, or already unlinked — is not an error)."""
+    from multiprocessing import shared_memory
+
+    if name is None:
+        return
+    try:
+        shm = shared_memory.SharedMemory(name=name)
+    except FileNotFoundError:
+        return
+    try:
+        # no _untrack_shm here: unlink() itself unregisters the name, which
+        # balances the register the attach above performed
+        shm.unlink()
+    except FileNotFoundError:
+        pass  # raced with another cleanup — already gone
+    finally:
+        shm.close()

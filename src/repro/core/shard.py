@@ -34,8 +34,12 @@ frozen-seed-engine checks in tests/test_equivalence.py):
 
 Backends:
 
-* ``process`` — fork-based process pool, one shard per core; shard results
-  travel back as numpy column buffers, not object graphs.
+* ``process`` — fork-based process pool, one shard per core; shard columns
+  travel back through parent-named ``multiprocessing.shared_memory``
+  segments (one memcpy per section, a few hundred bytes of pickled
+  metadata per shard) with deterministic close/unlink teardown in the
+  driver — set ``REPRO_SHARD_TRANSPORT=pickle`` to fall back to shipping
+  the column buffers over the pool's pickle channel.
 * ``interleaved`` — cooperative round-robin of ``Simulator.run_iter``
   generators in a single process (deterministic, no IPC; the fallback where
   fork is unavailable).
@@ -63,7 +67,12 @@ import numpy as np
 from bisect import bisect_right
 
 from .metrics import RunMetrics, summarize
-from .records import RecordColumns
+from .records import (
+    RecordColumns,
+    read_columns_shm,
+    unlink_columns_shm,
+    write_columns_shm,
+)
 from .scheduler import make_scheduler
 from .simulator import SimConfig, Simulator
 from .trace import VUProgram
@@ -118,6 +127,10 @@ class ShardSpec:
     failures: Tuple[Tuple[float, int], ...] = ()  # (t, local worker id)
     additions: Tuple[Tuple[float, int], ...] = ()  # (t, local worker id)
     programs: Optional[Tuple[VUProgram, ...]] = None  # explicit VU slice
+    #: shared-memory segment this shard ships its columns through (set by the
+    #: process-pool driver only; None everywhere else, keeping spec equality
+    #: and pickles from older captures intact)
+    shm_name: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -166,10 +179,10 @@ def _result_from(spec: ShardSpec, sim: Simulator, wall_s: float) -> ShardResult:
 
 
 def run_shard(spec: ShardSpec) -> ShardResult:
-    """Run one shard to completion (the process-pool entry point).
+    """Run one shard to completion (the in-process / pickle-transport entry).
 
     Drains ``run_iter`` directly so no per-record Python objects are ever
-    materialized — results cross process boundaries as column buffers.
+    materialized — results stay columnar end to end.
     """
     sim = build_simulator(spec)
     programs = list(spec.programs) if spec.programs is not None else None
@@ -177,6 +190,59 @@ def run_shard(spec: ShardSpec) -> ShardResult:
     for _ in sim.run_iter(n_vus=spec.n_vus, duration_s=spec.duration_s, programs=programs):
         pass
     return _result_from(spec, sim, time.perf_counter() - t0)
+
+
+#: set to ``pickle`` to ship shard results through the pool's pickle channel
+#: instead of shared-memory segments (debugging / exotic platforms)
+TRANSPORT_ENV = "REPRO_SHARD_TRANSPORT"
+
+#: every segment the pool driver names starts with this (leak checks key on it)
+SHM_PREFIX = "repro-shm-"
+
+
+@dataclasses.dataclass
+class _ShardShipment:
+    """What a shard child sends back over the pool's pickle channel when the
+    columns travel through shared memory: segment metadata plus the scalar
+    counters — a few hundred bytes regardless of run size."""
+
+    index: int
+    shm_name: Optional[str]  # None when the shard produced zero rows
+    n_rec: int
+    n_asg: int
+    n_events: int
+    wall_s: float
+    resubmits: int
+    lost_tasks: int
+
+
+def _run_shard_shipped(spec: ShardSpec) -> _ShardShipment:
+    """Pool entry for the shared-memory transport: run the shard, write its
+    columns into the parent-named segment, return only the metadata.
+
+    The timed window covers the event loop exactly as ``run_shard``'s does;
+    the segment write happens after the clock stops, so per-shard
+    ``wall_s`` (and ``aggregate_events_per_s``) measure the same thing on
+    both transports."""
+    sim = build_simulator(spec)
+    programs = list(spec.programs) if spec.programs is not None else None
+    t0 = time.perf_counter()
+    for _ in sim.run_iter(n_vus=spec.n_vus, duration_s=spec.duration_s, programs=programs):
+        pass
+    wall = time.perf_counter() - t0
+    cols = sim.record_columns
+    at, aw = sim.assignment_columns
+    name = write_columns_shm(spec.shm_name, cols, at, aw)
+    return _ShardShipment(
+        index=spec.index,
+        shm_name=name,
+        n_rec=len(cols),
+        n_asg=len(at),
+        n_events=sim.n_events,
+        wall_s=wall,
+        resubmits=sim.resubmits,
+        lost_tasks=sim.lost_tasks,
+    )
 
 
 @dataclasses.dataclass
@@ -400,13 +466,50 @@ def _run_process_pool(
     )
     ctx = mp.get_context(start)
     max_workers = max_workers or min(len(specs), os.cpu_count() or 1)
+    use_shm = os.environ.get(TRANSPORT_ENV, "shm").strip().lower() != "pickle"
     with warnings.catch_warnings():
         if start == "fork":
             warnings.filterwarnings(
                 "ignore", message=r"os\.fork\(\) was called", category=RuntimeWarning
             )
         with ProcessPoolExecutor(max_workers=max_workers, mp_context=ctx) as pool:
-            return list(pool.map(run_shard, specs))
+            if not use_shm:
+                return list(pool.map(run_shard, specs))
+            # parent names every segment up front: whatever happens in the
+            # children (including a crash mid-write), the finally below can
+            # find and unlink each one — deterministic teardown, no orphans
+            token = f"{SHM_PREFIX}{os.getpid()}-{os.urandom(4).hex()}"
+            named = [
+                dataclasses.replace(s, shm_name=f"{token}-{s.index}") for s in specs
+            ]
+            try:
+                shipments = list(pool.map(_run_shard_shipped, named))
+                results = []
+                for spec, ship in zip(specs, shipments):
+                    if ship.shm_name is None:  # zero-row shard: no segment
+                        cols = RecordColumns.empty()
+                        at = np.zeros(0, np.float64)
+                        aw = np.zeros(0, np.int64)
+                    else:
+                        cols, at, aw = read_columns_shm(
+                            ship.shm_name, ship.n_rec, ship.n_asg
+                        )
+                    results.append(
+                        ShardResult(
+                            spec=spec,  # the caller's spec: shm_name stays None
+                            records=cols,
+                            assign_t=at,
+                            assign_w=aw,
+                            n_events=ship.n_events,
+                            wall_s=ship.wall_s,
+                            resubmits=ship.resubmits,
+                            lost_tasks=ship.lost_tasks,
+                        )
+                    )
+                return results
+            finally:
+                for s in named:
+                    unlink_columns_shm(s.shm_name)
 
 
 def _run_interleaved(
@@ -458,8 +561,7 @@ class ShardedSimulator:
     Elasticity and fault injection stay per-shard (each shard is an
     independent cluster): ``inject_failure`` and ``inject_worker`` both take
     a *global* worker id and map it onto the owning shard via the static
-    partition (the legacy ``inject_worker(t, local_id, shard=k)`` form is
-    still accepted but deprecated).  Because global ids live inside a
+    partition.  Because global ids live inside a
     shard's static span by construction, elastic joins are re-joins of
     failed workers — ids beyond the partition would remap into the *next*
     shard's global range after the merge, so they are rejected.
@@ -507,36 +609,18 @@ class ShardedSimulator:
         k, local = self.shard_of_worker(worker)
         self._failures.append((k, t, local))
 
-    def inject_worker(self, t: float, worker: int, shard: Optional[int] = None) -> None:
+    def inject_worker(self, t: float, worker: int) -> None:
         """Schedule an (elastic re-)join at time ``t`` by *global* worker id.
 
         Unified with :meth:`inject_failure`: the global id resolves to
         ``(owning shard, local id)`` through the static partition, so
         ``inject_failure(t1, w)`` + ``inject_worker(t2, w)`` round-trips the
-        same physical worker.  The pre-unification form
-        ``inject_worker(t, local_id, shard=k)`` still works but is
-        deprecated (``DeprecationWarning``); ids outside the partition are
-        rejected in both forms because the merge remap only covers the
-        static spans.
+        same physical worker.  Ids outside the partition are rejected
+        because the merge remap only covers the static spans.  (The
+        pre-unification ``inject_worker(t, local_id, shard=k)`` form,
+        deprecated since PR 4, has been removed.)
         """
-        if shard is None:
-            k, local = self.shard_of_worker(worker)
-        else:
-            warnings.warn(
-                "inject_worker(t, local_id, shard=k) is deprecated; pass the "
-                "global worker id (unified with inject_failure)",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            if not 0 <= shard < self.n_shards:
-                raise ValueError(f"shard {shard} out of range")
-            if not 0 <= worker < self.worker_split[shard]:
-                raise ValueError(
-                    f"local worker {worker} outside shard {shard}'s static "
-                    f"span of {self.worker_split[shard]} ids; global-id merge "
-                    "remapping only covers re-joins within the span"
-                )
-            k, local = shard, worker
+        k, local = self.shard_of_worker(worker)
         self._additions.append((k, t, local))
 
     # ---------------------------------------------------------------- plan

@@ -141,7 +141,82 @@ class SimConfig:
 
 # RequestRecord lives in core.records now; re-exported here for the legacy
 # import path (``from repro.core.simulator import RequestRecord``).
-__all__ = ["RequestRecord", "SalvagedVU", "SimConfig", "Simulator", "StolenTask"]
+__all__ = [
+    "BurstDetector",
+    "RequestRecord",
+    "SalvagedVU",
+    "SimConfig",
+    "Simulator",
+    "StolenTask",
+]
+
+
+class BurstDetector:
+    """EWMA + threshold burst detector over near-horizon event density.
+
+    The adaptive half of the fused-dispatch path (``jax_sched
+    .sched_many_adaptive``): callers feed it the event density ahead of the
+    clock — :meth:`Simulator.heap_density`, or events/s over an incoming
+    event window — and it answers with a dispatch chunk size.  A smoothed
+    density above a threshold selects that threshold's chunk (largest
+    first); below every threshold it falls back to ``base_chunk`` (1 =
+    single-event stepping), so sparse streams never pay kernel-launch
+    padding for mostly-empty chunks and bursts batch wide.
+
+    The EWMA (``ewma += alpha * (density - ewma)``; first observation
+    primes it) makes the choice hysteretic: one quiet window inside a burst
+    does not collapse the chunk size, and one spike does not inflate it.
+    Pure observer — it never touches event order, so dispatch results are
+    bitwise independent of the chunk choice (pinned in
+    tests/test_scheduler.py).
+
+    Args:
+        alpha: EWMA smoothing factor in (0, 1].
+        thresholds: ``((density, chunk), ...)`` sorted descending by
+            density; the first row whose density the EWMA meets wins.
+        base_chunk: chunk when the EWMA is below every threshold.
+    """
+
+    __slots__ = ("alpha", "thresholds", "base_chunk", "ewma", "_primed")
+
+    def __init__(
+        self,
+        alpha: float = 0.25,
+        thresholds: Tuple[Tuple[float, int], ...] = ((4096.0, 4096), (1024.0, 1024), (256.0, 256)),
+        base_chunk: int = 1,
+    ):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if base_chunk < 1:
+            raise ValueError(f"base_chunk must be >= 1, got {base_chunk}")
+        rows = tuple((float(d), int(c)) for d, c in thresholds)
+        if any(c < 1 for _, c in rows):
+            raise ValueError(f"chunk sizes must be >= 1, got {rows}")
+        if list(rows) != sorted(rows, reverse=True):
+            raise ValueError(f"thresholds must be sorted descending, got {rows}")
+        self.alpha = alpha
+        self.thresholds = rows
+        self.base_chunk = int(base_chunk)
+        self.ewma = 0.0
+        self._primed = False
+
+    def observe(self, density: float) -> int:
+        """Fold one density sample in; return the chunk size to use now."""
+        density = float(density)
+        if not self._primed:
+            self.ewma = density
+            self._primed = True
+        else:
+            self.ewma += self.alpha * (density - self.ewma)
+        return self.chunk
+
+    @property
+    def chunk(self) -> int:
+        """Current chunk choice for the smoothed density (no fold)."""
+        for thresh, chunk in self.thresholds:
+            if self.ewma >= thresh:
+                return chunk
+        return self.base_chunk
 
 
 # integer event kinds; the *push order* (and with it the tie-breaking
@@ -397,6 +472,20 @@ class Simulator:
         self.funcs = list(funcs) if funcs is not None else make_functions(seed=seed)
         self.seed = seed
         self.workers = {w: _Worker(w, self.cfg) for w in range(self.cfg.n_workers)}
+        # incremental pressure counters: total pending tasks and workers with
+        # at least one running task, maintained at every mutation site so
+        # pressure() is O(1) instead of an O(workers) scan per call.  The
+        # cluster tier polls pressure per shard per tick — at 100k workers
+        # the scan was the coordination cost, not the event loop.
+        self._queued_n = 0
+        self._busy_n = 0
+        # dirty-shard publication (core.coord): when a coordinator attaches a
+        # sink, any state change that can move pressure / warm state / the
+        # dead-or-alive status adds this shard's index to it.  None (the
+        # default) costs one truth test on the marking paths and nothing in
+        # the event loop itself — static runs are untouched.
+        self._dirty_sink: Optional[set] = None
+        self._dirty_idx = -1
         self._heap: List[Tuple[float, int, int, tuple]] = []
         self._seq = itertools.count()
         self.t = 0.0
@@ -795,12 +884,60 @@ class Simulator:
             n += 1
             step(kind, payload)
         self.n_events += n
+        if n:
+            self._mark_dirty()
         return n
 
     @property
     def done(self) -> bool:
         """True once no pending event falls inside the deadline."""
         return not self._heap or self._heap[0][0] > self._deadline
+
+    def next_event_time(self) -> float:
+        """Time of the earliest pending event (``inf`` on an empty heap).
+
+        The event frontier the cluster tier uses to skip ``step_until`` on
+        shards with nothing scheduled inside the tick — an O(1) peek, so an
+        idle shard costs one comparison per tick instead of a call."""
+        return self._heap[0][0] if self._heap else float("inf")
+
+    def heap_density(self, horizon_s: float = 0.25) -> float:
+        """Pending events per second inside the heap's near horizon.
+
+        Counts events within ``horizon_s`` of the earliest pending event —
+        the burst signal a :class:`BurstDetector` folds to pick dispatch
+        chunk sizes.  One O(heap) pass; meant to be sampled per dispatch
+        batch or per tick, never per event."""
+        if horizon_s <= 0:
+            raise ValueError(f"horizon_s must be > 0, got {horizon_s}")
+        heap = self._heap
+        if not heap:
+            return 0.0
+        hi = heap[0][0] + horizon_s
+        n = 0
+        for ev in heap:
+            if ev[0] <= hi:
+                n += 1
+        return n / horizon_s
+
+    def attach_dirty(self, sink: set, idx: int) -> None:
+        """Publish this shard's state changes into ``sink`` as index ``idx``.
+
+        The dirty-shard contract (docs/ARCHITECTURE.md §13): after any event
+        processing or external mutation (admit / receive / steal / salvage)
+        the shard adds ``idx`` to ``sink``; the coordinator drains the set
+        each tick and re-reads only those shards.  Marking may over-approximate
+        (a sweep that evicted nothing still marks) — that costs a cached
+        re-read, never a stale decision.  Attaching marks immediately so the
+        first refresh sees every shard."""
+        self._dirty_sink = sink
+        self._dirty_idx = idx
+        sink.add(idx)
+
+    def _mark_dirty(self) -> None:
+        s = self._dirty_sink
+        if s is not None:
+            s.add(self._dirty_idx)
 
     def pressure(self) -> float:
         """Local load pressure: queued arrivals per worker + busy fraction.
@@ -812,7 +949,20 @@ class Simulator:
         cluster reads 1.0, and queueing pushes the value above 1.  This is
         the watermark signal the global admission tier polls between
         :meth:`step_until` calls.
+
+        O(1): both counts are maintained incrementally at every mutation
+        site (:meth:`_pressure_ref` is the retired scan, kept as the
+        invariant oracle for tests).  Same integers, same division — the
+        value is bit-identical to the scan's.
         """
+        alive = len(self.workers)
+        if not alive:
+            return float("inf")
+        return (self._queued_n + self._busy_n) / alive
+
+    def _pressure_ref(self) -> float:
+        """The original O(workers) pressure scan — the oracle the counter
+        invariant is pinned against (tests/test_coord.py)."""
         alive = busy = queued = 0
         for w in self.workers.values():
             alive += 1
@@ -941,6 +1091,7 @@ class Simulator:
             if self._fluct_identity is not None:
                 self._fluct_identity.append((self.seed, v))
         self._push(t, _SUBMIT, (vu,))
+        self._mark_dirty()
         return vu
 
     # ------------------------------------------------- cross-shard stealing
@@ -986,6 +1137,7 @@ class Simulator:
                         pend.append(task)  # put the fallback back (newest)
                         task = pend.pop(i)
                         break
+            self._queued_n -= 1  # net one task left pending (swap is neutral)
             self.sched.on_cancel(task.worker, self._fnames[task.func])
             vu = task.vu
             self._flush_fluct()
@@ -1009,6 +1161,8 @@ class Simulator:
             )
             self._vu_pos[vu] = len(self._prog_funcs[vu])  # retire the VU here
             self.stolen_out += 1
+        if out:
+            self._mark_dirty()
         return out
 
     def _export_vu(self, vu: int, func: int, ev_idx: int, t_submit: float,
@@ -1085,6 +1239,8 @@ class Simulator:
             self._heap = keep
             heapq.heapify(self._heap)
         self.salvaged_out += len(out)
+        if out:
+            self._mark_dirty()
         return out
 
     def receive_task(self, stolen: StolenTask, t: Optional[float] = None) -> int:
@@ -1109,6 +1265,7 @@ class Simulator:
         task.fail_t = stolen.fail_t
         self._push(t, _RESUBMIT, (task,))
         self.stolen_in += 1
+        self._mark_dirty()
         return vu
 
     def _register_foreign(self, stolen: StolenTask) -> int:
@@ -1174,6 +1331,7 @@ class Simulator:
         else:
             self._push(max(sal.resume_t, t), _SUBMIT, (vu,))
         self.salvaged_in += 1
+        self._mark_dirty()
         return vu
 
     def outstanding(self) -> int:
@@ -1266,6 +1424,7 @@ class Simulator:
                 self.sched.on_evict(worker.wid, self._fnames[evicted.func])
             if worker.busy_mem_mb + worker.idle_mem_mb + mem > worker.pool_mb:
                 worker.pending.append(task)  # waits for memory
+                self._queued_n += 1
                 return
             worker.busy_mem_mb += mem
             task.cold = True
@@ -1278,6 +1437,8 @@ class Simulator:
         elif entry["pending"]:
             self._flush_fluct()  # lazily admitted rows fill in place
         task.work_s = task.remaining_s = base_ms * row[task.ev_idx] / 1e3
+        if not worker.running:
+            self._busy_n += 1  # idle -> busy transition
         worker.start(task)
         self._reschedule(worker)
 
@@ -1307,6 +1468,8 @@ class Simulator:
             (done if task.remaining_s <= 1e-12 else keep).append(task)
         if done:
             worker.running = keep
+            if not keep:
+                self._busy_n -= 1  # busy -> idle transition
             worker._min_ok = False
             for task in done:
                 self._complete(worker, task)
@@ -1345,6 +1508,7 @@ class Simulator:
         if not worker.pending:
             return
         waiting, worker.pending = worker.pending, []  # _start_or_queue may re-append
+        self._queued_n -= len(waiting)
         for task in waiting:
             if (
                 task.func in worker.idle
@@ -1354,6 +1518,7 @@ class Simulator:
                 self._start_or_queue(worker, task)
             else:
                 worker.pending.append(task)
+                self._queued_n += 1
 
     def _ev_sweep(self) -> None:
         cfg = self.cfg
@@ -1390,6 +1555,9 @@ class Simulator:
             return
         worker.advance(self.t)
         worker.alive = False
+        self._queued_n -= len(worker.pending)
+        if worker.running:
+            self._busy_n -= 1
         self.sched.on_worker_removed(wid)
         # running + pending tasks are lost; control plane retries them with
         # capped exponential backoff until the per-task budget runs out

@@ -72,6 +72,7 @@ def steal_tick(
     t: Optional[float] = None,
     max_moves: Optional[int] = None,
     prefer_warm: bool = False,
+    pressures: Optional[Sequence[float]] = None,
 ) -> List[Migration]:
     """One stealing round over co-run shards; returns the moves it made.
 
@@ -98,8 +99,14 @@ def steal_tick(
             exported instead of the plain newest.  Victim/thief heap order
             is untouched, and ``False`` (the default) is byte-identical to
             the pre-digest tier — the ARCHITECTURE §11 off-path guarantee.
+        pressures: the tick's per-shard pressure vector, when the caller
+            already holds one — the admission loop passes its
+            ``ShardCoordinator``'s cached vector (docs/ARCHITECTURE.md
+            §13), which equals the live reads at this point in the tick
+            (live pressure cannot change between the tick-top refresh and
+            the steal round).  Default ``None``: read live.
 
-    The two heaps are rebuilt from live ``Simulator.pressure()`` each tick;
+    The two heaps are rebuilt from the tick's pressure vector each round;
     within the tick, moves adjust effective pressures exactly like admission
     pulls do, so staleness is bounded by the tick period either way.
     """
@@ -108,7 +115,8 @@ def steal_tick(
             f"steal_watermark {steal_watermark} must be >= pull watermark "
             f"{pull_watermark} (a shard must never be victim and thief at once)"
         )
-    pressures = [sim.pressure() for sim in sims]
+    if pressures is None:
+        pressures = [sim.pressure() for sim in sims]
     # max-heap of victims, min-heap of thieves — the same pressure-keyed
     # heap the admission tier runs, here in both directions at once.
     victims = [(-p, k) for k, p in enumerate(pressures) if p > steal_watermark]
@@ -184,6 +192,8 @@ def drain_tick(
     inv_workers: Sequence[float],
     t: float,
     pending: Optional[List[Tuple[int, SalvagedVU]]] = None,
+    dead: Optional[Sequence[int]] = None,
+    pressures: Optional[Sequence[float]] = None,
 ) -> Tuple[List[Salvage], List[Tuple[int, SalvagedVU]]]:
     """One dead-shard drain round: salvage every fully-dead shard's live VUs
     onto live shards.  Returns ``(moves, leftovers)``.
@@ -207,15 +217,28 @@ def drain_tick(
     Determinism: dead shards drain in index order, ``salvage_queued``'s
     export order is the victim heap order, and placement is the
     ``(pressure, index)`` total order — a pure function of the co-run state.
+
+    ``dead`` and ``pressures`` let a caller holding a ``ShardCoordinator``
+    view (docs/ARCHITECTURE.md §13) skip the O(K) dead-scan and the live
+    pressure reads: ``dead`` is the coordinator's dead-shard set (iterated
+    sorted, preserving the index-order drain contract), ``pressures`` its
+    cached vector — both equal to the live reads at this point in the tick.
     """
     exports: List[Tuple[int, SalvagedVU]] = list(pending or ())
-    for k, sim in enumerate(sims):
-        if not sim.workers:
-            for sv in sim.salvage_queued():
-                exports.append((k, sv))
+    if dead is None:
+        dead_idx = [k for k, sim in enumerate(sims) if not sim.workers]
+    else:
+        dead_idx = sorted(dead)
+    for k in dead_idx:
+        for sv in sims[k].salvage_queued():
+            exports.append((k, sv))
     if not exports:
         return [], []
-    thieves = [(sim.pressure(), k) for k, sim in enumerate(sims) if sim.workers]
+    thieves = [
+        ((sim.pressure() if pressures is None else pressures[k]), k)
+        for k, sim in enumerate(sims)
+        if sim.workers
+    ]
     if not thieves:
         return [], exports  # cluster fully dark: buffer until a revival
     heapq.heapify(thieves)

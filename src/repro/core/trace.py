@@ -22,9 +22,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
+
+from . import fastrng
 
 # Table I of the paper: FunctionBench on OpenLambda / m5.xlarge, ms.
 TABLE_I: Dict[str, Tuple[float, float]] = {
@@ -157,6 +160,68 @@ class VUProgram:
 
 
 _PROG_CACHE: Dict[tuple, List["VUProgram"]] = {}
+_PROG_FAST_OK = True  # cleared on any spot-check mismatch: per-VU path forever
+
+
+def _vu_programs_ref(
+    n_funcs: int,
+    weights: np.ndarray,
+    n_vus: int,
+    n_events: int,
+    seed: int,
+    think_lo: float,
+    think_hi: float,
+    vu_start: int = 0,
+) -> List["VUProgram"]:
+    """The seed engine's per-VU draw loop, verbatim: one fresh
+    ``default_rng((seed, vu))`` per VU.  Reference for the vectorized fast
+    path (spot checks, pin tests, and the fallback when the fast path cannot
+    prove itself)."""
+    programs = []
+    for vu in range(vu_start, vu_start + n_vus):
+        rng = np.random.default_rng((seed, vu))
+        idx = rng.choice(n_funcs, size=n_events, p=weights)
+        sleep = rng.uniform(think_lo, think_hi, size=n_events)
+        programs.append(VUProgram(idx, sleep))
+    return programs
+
+
+def _vu_programs_vec(
+    n_funcs: int,
+    weights: np.ndarray,
+    n_vus: int,
+    n_events: int,
+    seed: int,
+    think_lo: float,
+    think_hi: float,
+) -> List["VUProgram"]:
+    """Vectorized, bit-exact rebuild of the per-VU draw loop.
+
+    ``Generator.choice(n, size, p)`` is cdf-inversion over ``size`` raw
+    uniform doubles and ``Generator.uniform`` is ``lo + (hi-lo) * u`` over
+    the next ``size`` — both exactly reproducible from the first
+    ``2*n_events`` doubles of each VU's stream, which ``fastrng
+    .uniform_block`` computes for all VUs at once.  Each fresh workload key
+    spot-checks one row against the real per-VU Generator and degrades to
+    the reference loop process-wide on any mismatch (e.g. a numpy upgrade
+    changing ``choice``'s consumption pattern)."""
+    global _PROG_FAST_OK
+    u = fastrng.uniform_block(seed, n_vus, 2 * n_events)
+    cdf = weights.cumsum()
+    cdf /= cdf[-1]
+    idx = cdf.searchsorted(u[:, :n_events], side="right").astype(np.intp, copy=False)
+    sleep = think_lo + (think_hi - think_lo) * u[:, n_events:]
+    check = _vu_programs_ref(n_funcs, weights, 1, n_events, seed, think_lo, think_hi)[0]
+    if not (np.array_equal(idx[0], check.func_idx) and np.array_equal(sleep[0], check.sleep_s)):
+        _PROG_FAST_OK = False
+        warnings.warn(
+            "vectorized VU-program fast path disagrees with default_rng on "
+            "this numpy; falling back to the per-VU loop (bit-exact, slower)",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        return _vu_programs_ref(n_funcs, weights, n_vus, n_events, seed, think_lo, think_hi)
+    return [VUProgram(idx[v], sleep[v]) for v in range(n_vus)]
 
 
 def default_n_events(duration_s: float) -> int:
@@ -195,12 +260,15 @@ def make_vu_programs(
         return cached
     weights = np.array([f.weight for f in funcs])
     weights = weights / weights.sum()
-    programs = []
-    for vu in range(n_vus):
-        rng = np.random.default_rng((seed, vu))
-        idx = rng.choice(len(funcs), size=n_events, p=weights)
-        sleep = rng.uniform(think_lo, think_hi, size=n_events)
-        programs.append(VUProgram(idx, sleep))
+    seed_i = int(seed)
+    if _PROG_FAST_OK and n_vus >= 4 and n_events > 0 and 0 <= seed_i < 2**32:
+        programs = _vu_programs_vec(
+            len(funcs), weights, n_vus, n_events, seed_i, think_lo, think_hi
+        )
+    else:
+        programs = _vu_programs_ref(
+            len(funcs), weights, n_vus, n_events, seed, think_lo, think_hi
+        )
     if len(_PROG_CACHE) >= 16:
         _PROG_CACHE.clear()
     _PROG_CACHE[key] = programs

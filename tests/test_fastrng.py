@@ -110,6 +110,23 @@ def test_unlearned_tables_fallback_bit_exact(monkeypatch):
     assert np.array_equal(got, _reference(99, 5, 40, mean, sigma))
 
 
+@pytest.mark.parametrize("seed", [0, 7, 123_456])
+def test_vu_programs_vec_bit_identical_to_ref(seed):
+    """The vectorized VU-program builder (consumer of ``uniform_block``)
+    reproduces the per-VU ``default_rng((seed, vu))`` loop bit-for-bit —
+    function choices AND think times — not just the spot-checked row 0."""
+    from repro.core import trace
+
+    weights = np.array([0.5, 0.3, 0.2])
+    vec = trace._vu_programs_vec(3, weights, 12, 40, seed, 1.0, 3.0)
+    ref = trace._vu_programs_ref(3, weights, 12, 40, seed, 1.0, 3.0)
+    assert len(vec) == len(ref) == 12
+    for a, b in zip(vec, ref):
+        assert np.array_equal(a.func_idx, b.func_idx)
+        assert np.array_equal(a.sleep_s, b.sleep_s)
+    assert trace._PROG_FAST_OK  # the spot check passed on this numpy
+
+
 @pytest.mark.slow
 def test_bit_exact_large_sample():
     """Broad sweep: ~20k draws covering all ziggurat strips + rejection paths."""

@@ -544,12 +544,15 @@ def test_deadline_miss_rate_zero_without_metadata():
     assert m.deadline_miss_rate == 0.0
 
 
-def test_legacy_pull_tick_shim_still_drives_external_queue():
-    """The direct-drive _pull_tick entry point (kept for tests/ad-hoc
-    drivers) still admits from a caller-owned deque."""
+def test_pull_tick_shim_removed_registry_path_drives_external_queue():
+    """The deprecated direct-drive ``_pull_tick`` shim is gone; the registry
+    path — one ``admit_tick`` over a caller-built PolicyContext — is the
+    direct-drive entry point and admits from a caller-seeded queue."""
+    from repro.core.policies import PolicyContext
     from repro.core.trace import make_vu_programs
 
     adm = AdmissionSimulator(2, 4, scheduler="hiku", seed=0)
+    assert not hasattr(adm, "_pull_tick")  # the PR-5 shim is removed
     progs = make_vu_programs(FUNCS, 4, 32, 0)
     sims = []
     for k in range(2):
@@ -559,10 +562,17 @@ def test_legacy_pull_tick_shim_still_drives_external_queue():
         )
         sim.begin(n_vus=0, duration_s=10.0, programs=[])
         sims.append(sim)
-    waiting = deque(range(4))
+    policy = make_policy("pull", adm.admission)
     admitted, admit_t, pulls = [[], []], [[], []], [0, 0]
-    adm._pull_tick(0.0, sims, progs, waiting, admitted, admit_t, pulls)
-    assert sum(pulls) == 4 and not waiting
+    ctx = PolicyContext(
+        sims=sims, programs=progs, worker_split=adm.worker_split,
+        inv_workers=adm.inv_workers, admitted=admitted, admit_t=admit_t,
+        pulls=pulls, policy=policy,
+    )
+    for gid in range(4):
+        ctx.enqueue(gid)
+    policy.admit_tick(0.0, ctx)
+    assert sum(pulls) == 4 and ctx.waiting_n == 0
 
 
 # ------------------------------------------------------ learned policies

@@ -32,6 +32,9 @@ class _FirstChoice:
     def choice(self, xs):
         return min(xs)
 
+    def randrange(self, n):
+        return 0  # tie index 0 == lowest tied worker id
+
 
 def test_hiku_algorithm1_semantics():
     s = HikuScheduler(3, seed=0)
@@ -135,6 +138,123 @@ def test_sched_many_fused_matches_scan():
     # off-TPU default silently falls back to the scan path
     s3, (ws3, _) = sched_many_fused(state, ev)
     assert jnp.all(ws1 == ws3) and jnp.all(s1.conns == s3.conns)
+
+
+def _mixed_events(rng, n, n_funcs=6, n_workers=9):
+    events = []
+    for _ in range(n):
+        k = int(rng.integers(0, 3))
+        events.append(
+            (k, int(rng.integers(0, n_funcs)),
+             -1 if k == ARRIVAL else int(rng.integers(0, n_workers)))
+        )
+    return jnp.array(events, jnp.int32)
+
+
+def test_sched_many_adaptive_matches_scan_across_chunk_switches():
+    """Burst-adaptive dispatch == event-by-event scan, bitwise, while the
+    detector actually switches chunk sizes mid-stream (the density samples
+    drive it from single-event stepping into fused chunks and back)."""
+    from repro.core import BurstDetector, sched_many_adaptive
+
+    det = BurstDetector(alpha=1.0, thresholds=((100.0, 64),), base_chunk=1)
+    ev = _mixed_events(np.random.default_rng(7), 300)
+    # windows 0,3 step one event at a time; windows 1,2 fuse with chunk=64
+    densities = [0.0, 500.0, 500.0, 0.0]
+    s1, (ws1, warm1) = sched_many(init_state(6, 9), ev)
+    s2, (ws2, warm2) = sched_many_adaptive(
+        init_state(6, 9), ev, det, densities=densities, segment=80,
+        interpret=True,
+    )
+    assert det.chunk == 1  # the quiet tail pulled the EWMA back down
+    assert jnp.all(ws1 == ws2) and jnp.all(warm1 == warm2)
+    assert jnp.all(s1.idle == s2.idle) and jnp.all(s1.conns == s2.conns)
+
+
+def test_sched_many_adaptive_default_density_and_edges():
+    """Without explicit samples the window's own event count drives the
+    detector; ragged tails, empty streams and the PRNG-key fallback all
+    reduce to the scan path's results."""
+    from repro.core import BurstDetector, sched_many_adaptive
+
+    ev = _mixed_events(np.random.default_rng(11), 130)
+    det = BurstDetector(alpha=1.0, thresholds=((64.0, 32),), base_chunk=1)
+    s1, (ws1, warm1) = sched_many(init_state(6, 9), ev)
+    s2, (ws2, warm2) = sched_many_adaptive(
+        init_state(6, 9), ev, det, segment=64, interpret=True
+    )
+    assert jnp.all(ws1 == ws2) and jnp.all(warm1 == warm2)
+    assert jnp.all(s1.conns == s2.conns)
+    # empty stream: no windows, empty outputs, untouched state
+    det2 = BurstDetector()
+    s3, (ws3, warm3) = sched_many_adaptive(
+        init_state(2, 2), jnp.zeros((0, 3), jnp.int32), det2
+    )
+    assert ws3.shape == (0,) and warm3.shape == (0,)
+    assert int(s3.idle.sum()) == 0 and det2.ewma == 0.0
+    # randomized tie-breaks route through the scan path unchanged
+    key = jax.random.key(3)
+    sa, (wa, _) = sched_many(init_state(6, 9), ev, key=key)
+    sb, (wb, _) = sched_many_adaptive(init_state(6, 9), ev, det, key=key)
+    assert jnp.all(wa == wb) and jnp.all(sa.conns == sb.conns)
+    # density samples must cover every window
+    import pytest
+
+    with pytest.raises(ValueError):
+        sched_many_adaptive(init_state(6, 9), ev, det, densities=[1.0], segment=64)
+
+
+def test_burst_detector_thresholds_and_hysteresis():
+    from repro.core import BurstDetector
+
+    det = BurstDetector(
+        alpha=0.5, thresholds=((1000.0, 1024), (100.0, 128)), base_chunk=1
+    )
+    assert det.observe(2000.0) == 1024  # first sample primes the EWMA
+    assert det.observe(0.0) == 1024  # one quiet window: smoothed to 1000
+    assert det.observe(0.0) == 128  # decays through the lower band (500)
+    assert det.observe(0.0) == 128  # 250 still above 100
+    assert det.observe(0.0) == 128  # 125 still above 100
+    assert det.observe(0.0) == 1  # 62.5: below every threshold, base chunk
+    import pytest
+
+    with pytest.raises(ValueError):
+        BurstDetector(alpha=0.0)
+    with pytest.raises(ValueError):
+        BurstDetector(thresholds=((10.0, 16), (20.0, 32)))  # not descending
+    with pytest.raises(ValueError):
+        BurstDetector(base_chunk=0)
+
+
+def test_least_connections_tracker_matches_ref_live(monkeypatch):
+    """The bitmap-tracker fallback equals the full-scan reference on every
+    call of a live run — same worker picked, same randomness consumed —
+    including across a worker failure and rejoin (tracker drop/add)."""
+    from repro.core import SimConfig, Simulator
+    from repro.core.scheduler import Scheduler
+
+    calls = []
+    orig = Scheduler._least_connections
+
+    def checked(self):
+        before = self.rng.getstate()
+        w = orig(self)
+        after = self.rng.getstate()
+        self.rng.setstate(before)
+        assert Scheduler._least_connections_ref(self) == w
+        assert self.rng.getstate() == after  # identical RNG consumption
+        calls.append(w)
+        return w
+
+    monkeypatch.setattr(Scheduler, "_least_connections", checked)
+    for name in ("hiku", "least_connections"):
+        sim = Simulator(
+            make_scheduler(name, 40, seed=3), cfg=SimConfig(n_workers=40), seed=3
+        )
+        sim.inject_failure(3.0, 7)
+        sim.inject_worker(9.0, 7)
+        sim.run(n_vus=120, duration_s=30.0)
+    assert len(calls) > 50  # the fallback path was actually exercised
 
 
 def test_jax_sched_random_tiebreak_uniform():

@@ -65,6 +65,51 @@ def test_backends_identical_to_serial(backend):
     assert np.array_equal(base.assign_w, other.assign_w)
 
 
+def test_process_transport_fallback_matches_shm(monkeypatch):
+    """``REPRO_SHARD_TRANSPORT=pickle`` ships the same bytes the shared-
+    memory segments do — the transport is invisible to every consumer."""
+
+    def run():
+        return ShardedSimulator(
+            2, 6, scheduler="hiku", seed=7, backend="process"
+        ).run(n_vus=10, duration_s=10.0)
+
+    via_shm = run()
+    monkeypatch.setenv("REPRO_SHARD_TRANSPORT", "pickle")
+    via_pickle = run()
+    assert len(via_shm.records) > 0
+    assert via_shm.records.equals(via_pickle.records)
+    assert np.array_equal(via_shm.assign_t, via_pickle.assign_t)
+    assert np.array_equal(via_shm.assign_w, via_pickle.assign_w)
+    assert via_shm.n_events == via_pickle.n_events
+    for r1, r2 in zip(via_shm.shards, via_pickle.shards):
+        assert r1.spec == r2.spec  # and the caller-visible spec carries
+        assert r1.spec.shm_name is None  # no transport detail either way
+        assert (r1.resubmits, r1.lost_tasks) == (r2.resubmits, r2.lost_tasks)
+
+
+def test_process_backend_teardown_is_deterministic():
+    """Two back-to-back process-backend runs in one interpreter leave no
+    shared-memory segments behind — teardown is explicit close/unlink in
+    the driver, not interpreter-exit garbage collection."""
+    import os
+
+    from repro.core.shard import SHM_PREFIX
+
+    def segments():
+        if not os.path.isdir("/dev/shm"):
+            return set()
+        return {f for f in os.listdir("/dev/shm") if f.startswith(SHM_PREFIX)}
+
+    before = segments()
+    for seed in (1, 2):
+        merged = ShardedSimulator(
+            2, 6, scheduler="hiku", seed=seed, backend="process"
+        ).run(n_vus=8, duration_s=8.0)
+        assert len(merged.records) > 0
+        assert segments() - before == set()  # clean between runs, not just after
+
+
 def test_shard_stream_equals_standalone_simulator():
     """A shard's stream is byte-identical to a monolithic run of its slice."""
     driver = ShardedSimulator(2, 8, scheduler="least_connections", seed=4,
@@ -134,30 +179,20 @@ def test_rejoin_after_failure_stays_in_shard_span():
     # shard's global id range after the merge remap: rejected up front
     with pytest.raises(ValueError):
         driver.inject_worker(8.0, 10)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError):
-            driver.inject_worker(8.0, 5, shard=0)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError):
-            driver.inject_worker(8.0, 2, shard=2)
 
 
-def test_inject_worker_global_and_legacy_forms_map_identically():
-    """Both injection hooks take global ids; the deprecated shard= form maps
-    onto the same (shard, local) pair and warns."""
-    unified = ShardedSimulator(2, 10, scheduler="hiku", seed=6, backend="serial")
-    unified.inject_failure(4.0, 7)  # global 7 -> shard 1, local 2
-    unified.inject_worker(8.0, 7)  # same id, same mapping, no shard= needed
-    legacy = ShardedSimulator(2, 10, scheduler="hiku", seed=6, backend="serial")
-    legacy.inject_failure(4.0, 7)
-    with pytest.warns(DeprecationWarning, match="global worker id"):
-        legacy.inject_worker(8.0, 2, shard=1)
-    su, sl = unified.plan(12, 25.0), legacy.plan(12, 25.0)
-    assert su == sl
+def test_inject_worker_legacy_shard_form_removed():
+    """The deprecated ``inject_worker(t, local_id, shard=k)`` form is gone:
+    the unified global-id signature rejects a ``shard`` keyword outright,
+    and the global form maps onto the same (shard, local) pair the legacy
+    form used to produce."""
+    driver = ShardedSimulator(2, 10, scheduler="hiku", seed=6, backend="serial")
+    driver.inject_failure(4.0, 7)  # global 7 -> shard 1, local 2
+    driver.inject_worker(8.0, 7)
+    with pytest.raises(TypeError):
+        driver.inject_worker(8.0, 2, shard=1)
+    su = driver.plan(12, 25.0)
     assert su[1].failures == ((4.0, 2),) and su[1].additions == ((8.0, 2),)
-    # ... and the runs they drive are identical streams
-    ru, rl = unified.run(12, 25.0), legacy.run(12, 25.0)
-    assert ru.records.equals(rl.records)
 
 
 def test_shard_of_worker_bounds():

@@ -198,7 +198,7 @@ def test_pressure_is_inf_with_all_workers_failed():
 def test_dead_shard_never_wins_pull_tick_or_steal_heap():
     """Satellite: a dead shard (pressure inf) must never pull an admission
     nor receive a stolen task."""
-    from collections import deque
+    from repro.core.policies import PolicyContext, make_policy
 
     funcs = make_functions(seed=0)
     dead = Simulator(make_scheduler("hiku", 1, seed=0), funcs=funcs,
@@ -211,9 +211,16 @@ def test_dead_shard_never_wins_pull_tick_or_steal_heap():
 
     adm = AdmissionSimulator(2, 3, scheduler="hiku", seed=0)
     progs = make_vu_programs(funcs, 4, 32, 0)
-    waiting = deque(range(4))
+    policy = make_policy("pull", adm.admission)
     admitted, admit_t, pulls = [[], []], [[], []], [0, 0]
-    adm._pull_tick(2.0, [dead, live], progs, waiting, admitted, admit_t, pulls)
+    ctx = PolicyContext(
+        sims=[dead, live], programs=progs, worker_split=adm.worker_split,
+        inv_workers=adm.inv_workers, admitted=admitted, admit_t=admit_t,
+        pulls=pulls, policy=policy,
+    )
+    for gid in range(4):
+        ctx.enqueue(gid)
+    policy.admit_tick(2.0, ctx)
     assert pulls[0] == 0 and admitted[0] == []  # the dead shard pulled nothing
     assert pulls[1] > 0
 

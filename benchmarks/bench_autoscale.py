@@ -1,0 +1,190 @@
+"""Autoscale matrix: sizing modes x bursty scenarios, costed in worker-seconds.
+
+The elasticity counterpart of ``bench_chaos``: the same seeded bursty
+scenarios (``flash_crowd``, ``diurnal``, ``on_off``) run under three pool
+sizing modes —
+
+* ``static`` — the full partition alive for the whole run (the baseline
+  every prior benchmark used); cost = ``n_workers * duration_s``.
+* ``reactive`` — :class:`~repro.core.autoscale.Autoscaler` feedback on the
+  *current* window's load only (threshold autoscaling).
+* ``predictive`` — the reactive floor plus the EWMA+trend / Welford
+  forecast sized over an MPC-style horizon (Nguyen et al., PAPERS.md):
+  capacity is provisioned for the worst forecast window, before the burst.
+
+Per cell: provisioned cost (worker-seconds, the axis elasticity is bought
+on), p99 / mean latency, cold rate, autoscaler actions, lost tasks.  Every
+scenario also runs with an active ``spot_preemption`` chaos plan — fault
+events and autoscaler actions interleave on the same engine hooks — so
+the matrix shows sizing composing with failures, not dodging them.
+
+Acceptance (the §14 / ROADMAP item-4 target, greppable rows):
+``autoscale/<scenario>/predictive_vs_static`` must show predictive sizing
+**cheaper** than the static pool (cost_frac < 1) at **equal p99**
+(p99_frac <= 1.02) on ``flash_crowd`` and ``diurnal``, plain and under
+the chaos plan (``autoscale/<scenario>+spot/...``).  Static runs byte-
+match the no-bus engine (tests/test_stream.py, tests/test_equivalence.py).
+"""
+
+from __future__ import annotations
+
+import time
+import warnings
+
+FULL = dict(n_shards=4, n_workers=32, n_vus=96, duration_s=40.0, mem_pool_mb=1024.0)
+QUICK = dict(n_shards=2, n_workers=12, n_vus=32, duration_s=14.0, mem_pool_mb=1024.0)
+
+SCENARIOS = ("flash_crowd", "diurnal", "on_off")
+QUICK_SCENARIOS = ("flash_crowd",)
+MODES = ("static", "reactive", "predictive")
+
+#: scenarios the acceptance criterion binds (ROADMAP item 4); ``on_off``
+#: rides along as an informational cell (accept=INFO) — its square-wave
+#: troughs make retire/revive churn a judgement call, not a contract
+REQUIRED = ("flash_crowd", "diurnal")
+
+#: sizing knobs shared by both autoscaled modes (tuned on the FULL
+#: protocol: enough headroom + downscale hysteresis that retiring warmth
+#: doesn't churn cold starts through the diurnal trough/crest cycle)
+KNOBS = dict(
+    window_s=1.0, target_pressure=0.55, horizon_windows=4,
+    down_after=2, notice_s=1.0,
+)
+
+
+def make_autoscaler(mode: str):
+    """Fresh per-run Autoscaler (forecast state is per-run), or None."""
+    from repro.core import AutoscaleConfig, Autoscaler
+
+    if mode == "static":
+        return None
+    return Autoscaler(AutoscaleConfig(mode=mode, **KNOBS))
+
+
+def spot_plan(p: dict, seed: int = 0):
+    """The active chaos plan the matrix composes with: two preemption
+    waves with notice windows and delayed replacements."""
+    from repro.core import chaos
+
+    dur = p["duration_s"]
+    return chaos.spot_preemption(
+        p["n_workers"], n_waves=2, wave_size=max(1, p["n_workers"] // 8),
+        t0=0.25 * dur, t1=0.6 * dur, notice_s=2.0, replace_after_s=4.0,
+        seed=seed,
+    )
+
+
+def run_cell(mode: str, scenario, p: dict, seed: int = 0):
+    """One (sizing mode, scenario) cell -> (run, metrics, autoscaler)."""
+    from repro.core import SimConfig
+    from repro.core.admission import AdmissionConfig, AdmissionSimulator
+
+    adm = AdmissionSimulator(
+        p["n_shards"], p["n_workers"], scheduler="hiku",
+        cfg=SimConfig(mem_pool_mb=p["mem_pool_mb"]), seed=seed,
+        admission=AdmissionConfig(),
+    )
+    asc = make_autoscaler(mode)
+    kw = scenario.run_kwargs()
+    if asc is not None:
+        kw["autoscaler"] = asc
+    with warnings.catch_warnings():
+        # shrunken pools legitimately leave some VUs unadmitted mid-trough
+        warnings.simplefilter("ignore", RuntimeWarning)
+        r = adm.run(scenario.n_vus, p["duration_s"], **kw)
+    return r, r.summarize(p["duration_s"]), asc
+
+
+def _fmt(r, m, asc) -> str:
+    n_act = len(asc.actuator.actions) if asc is not None else 0
+    return (
+        f"cost_ws={r.worker_seconds:.0f};p99_ms={m.p99_ms:.0f};"
+        f"mean_ms={m.mean_latency_ms:.0f};cold_rate={m.cold_rate:.4f};"
+        f"actions={n_act};lost={r.lost_tasks};stranded={r.stranded};"
+        f"requests={m.n_requests}"
+    )
+
+
+def run(quick: bool = False):
+    import dataclasses
+
+    from repro.core import make_functions
+    from repro.core.workloads import make_scenario
+
+    from .common import save_json
+
+    p = QUICK if quick else FULL
+    seed = 0
+    funcs = make_functions(seed=seed)
+    scn_names = QUICK_SCENARIOS if quick else SCENARIOS
+    chaos_variants = (False, True)
+    rows = []
+    payload = {
+        "params": dict(p), "modes": list(MODES), "knobs": dict(KNOBS),
+        "scenarios": [
+            s + ("+spot" if c else "") for c in chaos_variants for s in scn_names
+        ],
+    }
+    for with_chaos in chaos_variants:
+        for sname in scn_names:
+            scn = make_scenario(sname, funcs, p["n_vus"], p["duration_s"], seed=seed)
+            if with_chaos:
+                scn = dataclasses.replace(scn, faults=spot_plan(p, seed=seed))
+            tag = sname + ("+spot" if with_chaos else "")
+            cell = {}
+            for mode in MODES:
+                t0 = time.perf_counter()
+                r, m, asc = run_cell(mode, scn, p, seed=seed)
+                wall = time.perf_counter() - t0
+                cell[mode] = (r, m, asc)
+                rows.append(
+                    (
+                        f"autoscale/{tag}/{mode}",
+                        wall / max(m.n_requests, 1) * 1e6,
+                        _fmt(r, m, asc),
+                    )
+                )
+            payload[tag] = {
+                mode: {
+                    "cost_worker_seconds": r.worker_seconds,
+                    "p99_ms": m.p99_ms,
+                    "mean_ms": m.mean_latency_ms,
+                    "cold_rate": m.cold_rate,
+                    "actions": len(asc.actuator.actions) if asc else 0,
+                    "lost_tasks": r.lost_tasks,
+                    "n_requests": m.n_requests,
+                }
+                for mode, (r, m, asc) in cell.items()
+            }
+            # the acceptance row: predictive sizing vs the static pool —
+            # cheaper capacity (cost_frac < 1) at equal p99 (<= 1.02)
+            (r_st, m_st, _) = cell["static"]
+            (r_pr, m_pr, _) = cell["predictive"]
+            cost_frac = r_pr.worker_seconds / max(r_st.worker_seconds, 1e-9)
+            p99_frac = m_pr.p99_ms / max(m_st.p99_ms, 1e-9)
+            ok = cost_frac < 1.0 and p99_frac <= 1.02
+            required = sname in REQUIRED
+            accept = ("PASS" if ok else "FAIL") if required else "INFO"
+            rows.append(
+                (
+                    f"autoscale/{tag}/predictive_vs_static",
+                    0.0,
+                    f"cost_frac={cost_frac:.3f};p99_frac={p99_frac:.3f};"
+                    f"cost_static={r_st.worker_seconds:.0f};"
+                    f"cost_predictive={r_pr.worker_seconds:.0f};"
+                    f"p99_static={m_st.p99_ms:.0f};"
+                    f"p99_predictive={m_pr.p99_ms:.0f};"
+                    f"accept={accept}",
+                )
+            )
+            payload[tag]["predictive_vs_static"] = {
+                "cost_frac": cost_frac, "p99_frac": p99_frac, "accept": ok,
+                "required": required,
+            }
+    save_json("autoscale", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(row)

@@ -31,6 +31,7 @@ def main(argv=None) -> None:
     from . import (
         bench_admission,
         bench_affinity,
+        bench_autoscale,
         bench_chaos,
         bench_coldstart,
         bench_concurrency,
@@ -70,6 +71,7 @@ def main(argv=None) -> None:
         "stealing": bench_stealing,
         "policies": bench_policies,
         "chaos": bench_chaos,
+        "autoscale": bench_autoscale,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -27,6 +27,12 @@ end-to-end tour; each symbol's docstring states which contracts bind it):
   ``sjf``/``bandit`` policies), ``ShardScript``/``scripts_from_run``/
   ``replay_shards`` (``core.replay``: scripted per-shard re-execution of
   a recorded admission run, byte-identical on all three backends);
+* event plane / autoscaling — ``EventPlane``/``MetricEvent``
+  (``core.eventplane``: deterministic in-process pub/sub over windowed
+  metric summaries), ``Autoscaler``/``AutoscaleConfig``/
+  ``AutoscaleActuator`` (``core.autoscale``: reactive/predictive pool
+  sizing on the bus, scale-down via notice windows, scale-to-zero
+  janitor; docs/ARCHITECTURE.md §14 is the contract);
 * chaos — ``FaultEvent``/``FaultPlan`` (declarative seeded fault
   schedules) with the ``shard_kill_wave``/``spot_preemption``/
   ``rolling_restart``/``flappy_workers`` generators, plus
@@ -45,6 +51,7 @@ from .admission import (
     AdmissionShard,
     AdmissionSimulator,
 )
+from .autoscale import AutoscaleActuator, AutoscaleConfig, Autoscaler
 from .chaos import (
     FaultEvent,
     FaultPlan,
@@ -54,6 +61,7 @@ from .chaos import (
     spot_preemption,
 )
 from .estimators import BanditTuner, DurationEstimator
+from .eventplane import EventPlane, MetricEvent
 from .hiku import HikuScheduler
 from .jax_sched import (
     ARRIVAL,
@@ -105,10 +113,14 @@ __all__ = [
     "AdmissionRun",
     "AdmissionShard",
     "AdmissionSimulator",
+    "AutoscaleActuator",
+    "AutoscaleConfig",
+    "Autoscaler",
     "BanditTuner",
     "BurstDetector",
     "DurationEstimator",
     "EVICT",
+    "EventPlane",
     "FINISH",
     "FaultEvent",
     "FaultPlan",
@@ -116,6 +128,7 @@ __all__ = [
     "HikuScheduler",
     "JIQState",
     "MergedRun",
+    "MetricEvent",
     "Migration",
     "RecordAccumulator",
     "RecordColumns",

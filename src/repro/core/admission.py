@@ -67,7 +67,9 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .autoscale import AutoscaleActuator, Autoscaler
 from .coord import ShardCoordinator
+from .eventplane import CLUSTER_TOPIC, SHARD_TOPIC, EventPlane
 from .metrics import RunMetrics, summarize
 from .policies import PolicyContext, get_policy_class, make_policy, policy_knobs
 from .records import RecordColumns
@@ -214,6 +216,10 @@ class AdmissionShard:
     salvaged_in: int = 0  # salvaged VUs re-homed onto this shard
     outstanding: int = 0  # submitted-but-unresolved requests at run end
     alive: bool = True  # any live worker left at run end? (dead => stranded)
+    #: integral of the live worker count over [0, duration_s) — the
+    #: provisioned-capacity cost an elastic pool is scored on (§14);
+    #: a static shard reads n_workers * duration_s
+    worker_seconds: float = 0.0
 
 
 @dataclasses.dataclass
@@ -261,6 +267,12 @@ class AdmissionRun:
     def n_migrations(self) -> int:
         """Cross-shard task migrations performed (``pull+steal`` only)."""
         return len(self.migrations)
+
+    @property
+    def worker_seconds(self) -> float:
+        """Provisioned-capacity cost: live-worker-count integral summed
+        over shards (``benchmarks/bench_autoscale.py``'s cost axis)."""
+        return float(sum(s.worker_seconds for s in self.shards))
 
     @property
     def n_salvages(self) -> int:
@@ -504,6 +516,9 @@ class AdmissionSimulator:
         arrivals: Optional[Sequence[float]] = None,
         deadlines: Optional[Sequence[float]] = None,
         faults: Optional["FaultPlan"] = None,  # noqa: F821 (core.chaos)
+        bus: Optional[EventPlane] = None,
+        autoscaler: Optional[Autoscaler] = None,
+        metrics_window_s: Optional[float] = None,
     ) -> AdmissionRun:
         """Co-run the K shards under the global admission queue.
 
@@ -537,6 +552,21 @@ class AdmissionSimulator:
                 :meth:`inject_worker` / :meth:`inject_notice` for each
                 event before the run.  Scenario bundles carry one in
                 ``Scenario.faults``.
+            bus: optional :class:`~repro.core.eventplane.EventPlane` the
+                loop publishes window summaries onto — one ``("shard", k)``
+                event per shard (ascending ``k``, the merge tie-break)
+                then one ``("cluster",)`` event per completed metric
+                window, plus a final partial-window flush after the loop
+                drains.  Subscribers must be registered before this call
+                (the bus is sealed as the loops arm, §14).
+            autoscaler: optional :class:`~repro.core.autoscale.Autoscaler`
+                — subscribed to the bus (one is created when ``bus`` is
+                None), bound to an actuator over this run's shards, and
+                given the initial pool sizing before the loops arm.  Its
+                decision window is ``autoscaler.cfg.window_s``.
+            metrics_window_s: publish cadence when ``bus`` is given
+                without an autoscaler (default 1.0).  Either way the
+                window must be a positive multiple of ``tick_s``.
 
         Any VU still unadmitted at the deadline is reported on
         ``AdmissionRun.unadmitted`` and raises a ``RuntimeWarning`` — a
@@ -601,6 +631,45 @@ class AdmissionSimulator:
             # drops out of warm_capacity()/warm_digest() (doomed capacity is
             # not headroom — the §11 bugfix), with zero event-loop effect
             sims[k].inject_notice(ft, local, until)
+
+        # ---- live event plane + autoscaler (docs/ARCHITECTURE.md §14) ----
+        # Publishing and sizing are opt-in: with neither a bus nor an
+        # autoscaler this block is four no-op tests and the loop below is
+        # byte-identical to the static form.
+        actuator = None
+        m_win = 0
+        if autoscaler is not None:
+            if bus is None:
+                bus = EventPlane()
+            win_s = autoscaler.cfg.window_s
+        elif bus is not None:
+            win_s = 1.0 if metrics_window_s is None else float(metrics_window_s)
+        if bus is not None:
+            m_win = round(win_s / adm.tick_s)
+            if m_win < 1 or abs(m_win * adm.tick_s - win_s) > 1e-9:
+                raise ValueError(
+                    f"metric window {win_s}s must be a positive multiple of "
+                    f"tick_s={adm.tick_s} — summaries publish on tick "
+                    "boundaries only"
+                )
+        if autoscaler is not None:
+            actuator = AutoscaleActuator(
+                sims, self.worker_split, self.worker_offsets, notices,
+                duration_s, autoscaler.cfg.notice_s,
+            )
+            autoscaler.attach(bus, actuator, self.worker_split)
+            # initial pool: workers above each shard's initial target are
+            # retired at t=0 through the same validated inject path the
+            # chaos tier uses, so begin() checks the whole schedule at once
+            for k, keep in enumerate(autoscaler.initial_split(self.worker_split)):
+                for local in range(keep, self.worker_split[k]):
+                    sims[k].inject_failure(0.0, local)
+        if bus is not None:
+            bus.seal()  # §14: subscribers register before the loops arm
+        pub_seen = [0] * self.n_shards  # per-shard published-record cursors
+        pub_widx = 0  # next metric-window index
+        win_arrivals = 0  # VUs that became eligible this window
+
         for sim in sims:
             sim.begin(n_vus=0, duration_s=duration_s, programs=[])
 
@@ -636,11 +705,25 @@ class AdmissionSimulator:
         t0 = time.perf_counter()
         while True:
             coord.refresh()  # drain the dirty set: the tick's cached view
+            if m_win and tick and tick % m_win == 0:
+                # a metric window just completed: every event with time <= t
+                # has been processed, so the per-shard record accumulators
+                # hold exactly the completions with t_done <= t.  Publish
+                # (and let the autoscaler react) before this tick's
+                # admissions — capacity decisions see last window's truth,
+                # never a half-applied tick.
+                self._publish_window(
+                    bus, sims, coord, ctx, pub_seen, pub_widx,
+                    t - win_s, t, win_arrivals,
+                )
+                pub_widx += 1
+                win_arrivals = 0
             n_new = 0
             while qpos < n_vus and arr[order[qpos]] <= t:
                 ctx.enqueue(int(order[qpos]))
                 qpos += 1
                 n_new += 1
+            win_arrivals += n_new
             policy.observe(t, n_new, ctx)
             if notices:  # doomed-but-alive workers, per shard, right now
                 doomed = [0] * self.n_shards
@@ -714,14 +797,68 @@ class AdmissionSimulator:
                 # the call is a no-op — one O(1) peek instead
                 if sim.next_event_time() <= t:
                     sim.step_until(t)
+        if m_win and any(len(sim._rec) > s for sim, s in zip(sims, pub_seen)):
+            # trailing completions past the last boundary: one final partial
+            # window, so the published per-shard counts always sum to the
+            # full record stream (pinned in tests/test_stream.py)
+            self._publish_window(
+                bus, sims, coord, ctx, pub_seen, pub_widx,
+                pub_widx * win_s, t, win_arrivals,
+            )
         wall_s = time.perf_counter() - t0
         run = self._merge(
             sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,
             migrations, dl, arr, salvages, salvage_buf,
         )
+        for k, sim in enumerate(sims):
+            run.shards[k].worker_seconds = sim.worker_seconds_until(duration_s)
         if getattr(policy, "record_state", False):
             run.policy_state = list(policy.snapshots)
         return run
+
+    def _publish_window(
+        self, bus, sims, coord, ctx, seen, widx, t_lo, t_hi, arrivals,
+    ) -> None:
+        """Publish one completed metric window: ``("shard", k)`` events in
+        ascending shard order (the merge tie-break), then ``("cluster",)``
+        — the §14 publish order.  ``seen`` holds per-shard record cursors
+        (same exactly-once idiom as ``PolicyContext.new_completions``, on
+        separate cursors so policies and subscribers never race)."""
+        total = 0
+        for k, sim in enumerate(sims):
+            acc = sim._rec
+            n = len(acc)
+            i = seen[k]
+            n_done = n - i
+            sum_ms = 0.0
+            n_cold = 0
+            if n_done:
+                ts, td, cold = acc.t_submit, acc.t_done, acc.cold
+                for j in range(i, n):
+                    sum_ms += (td[j] - ts[j]) * 1e3
+                    n_cold += cold[j]
+            seen[k] = n
+            total += n_done
+            bus.publish(
+                (SHARD_TOPIC, k), widx, t_lo, t_hi,
+                {
+                    "n_done": n_done,
+                    "sum_ms": sum_ms,
+                    "n_cold": int(n_cold),
+                    "load": sim._queued_n + sim._busy_n,
+                    "alive": len(sim.workers),
+                    "outstanding": sim.outstanding(),
+                    "pressure": coord.pressure[k],
+                },
+            )
+        bus.publish(
+            (CLUSTER_TOPIC,), widx, t_lo, t_hi,
+            {
+                "n_done": total,
+                "arrivals": arrivals,
+                "queue_depth": ctx.waiting_n,
+            },
+        )
 
     def _merge(
         self, sims, admitted, admit_t, pulls, n_vus, wall_s, queue_t, queue_depth,

@@ -435,10 +435,15 @@ def unlink_columns_shm(name: "Union[str, None]") -> None:
     except FileNotFoundError:
         return
     try:
-        # no _untrack_shm here: unlink() itself unregisters the name, which
-        # balances the register the attach above performed
+        # no _untrack_shm on success: unlink() itself unregisters the name,
+        # which balances the register the attach above performed
         shm.unlink()
     except FileNotFoundError:
-        pass  # raced with another cleanup — already gone
+        # raced with another cleanup (writer-crash salvage vs the parent's
+        # finally-unlink): the segment is already gone, but the failed
+        # unlink never unregistered the attach — balance it explicitly or
+        # resource_tracker re-unlinks the *name* at exit, clobbering any
+        # later segment that reused it
+        _untrack_shm(shm)
     finally:
         shm.close()

@@ -453,6 +453,26 @@ def _stream_windows(
             return
 
 
+def _publish_chunks(chunks, bus, n_shards: int):
+    """Publish each chunk's window summary before yielding it (the
+    ``run_stream(bus=...)`` path).  Payloads derive from the chunk alone —
+    the same values on every backend — and follow the §14 publish order:
+    shard topics in ascending shard index, then the cluster topic."""
+    from .eventplane import CLUSTER_TOPIC, SHARD_TOPIC
+
+    for ch in chunks:
+        for k in range(n_shards):
+            bus.publish(
+                (SHARD_TOPIC, k), ch.index, ch.t_lo, ch.t_hi,
+                {"n_done": int(ch.shard_counts[k])},
+            )
+        bus.publish(
+            (CLUSTER_TOPIC,), ch.index, ch.t_lo, ch.t_hi,
+            {"n_done": len(ch.records), "n_assign": int(len(ch.assign_t))},
+        )
+        yield ch
+
+
 def _run_process_pool(
     specs: Sequence[ShardSpec], max_workers: Optional[int] = None
 ) -> List[ShardResult]:
@@ -714,6 +734,7 @@ class ShardedSimulator:
         duration_s: float = 100.0,
         window_s: float = 1.0,
         programs: Optional[Sequence[VUProgram]] = None,
+        bus=None,
     ) -> Iterator[StreamChunk]:
         """Streaming form of :meth:`run`: heap-merge the shard streams into
         completed ``window_s``-wide :class:`StreamChunk` windows.
@@ -727,9 +748,19 @@ class ShardedSimulator:
         ``serial``/``process`` complete the shards first and then stream the
         identical merge (useful for post-hoc windowing, without the
         in-flight property).
+
+        ``bus`` optionally attaches an :class:`~repro.core.eventplane
+        .EventPlane`: before each chunk is yielded, one ``("shard", k)``
+        summary per shard (ascending ``k`` — the merge tie-break) and one
+        ``("cluster",)`` summary are published for that window.  Payloads
+        are pure functions of the chunk, so the published stream is
+        byte-identical across backends (tests/test_stream.py) and the bus
+        is sealed here, before the loops arm (§14).
         """
         specs = self.plan(n_vus, duration_s, programs)
         backend = self._resolve_backend()
+        if bus is not None:
+            bus.seal()
         if backend == "interleaved":
             sims = [build_simulator(spec) for spec in specs]
             for spec, sim in zip(specs, sims):
@@ -744,7 +775,7 @@ class ShardedSimulator:
                 for sim in sims:
                     sim.step_until(t_hi)
 
-            yield from _stream_windows(specs, cursors, duration_s, window_s, advance)
+            chunks = _stream_windows(specs, cursors, duration_s, window_s, advance)
         else:
             if backend == "process":
                 results = _run_process_pool(specs)
@@ -752,4 +783,8 @@ class ShardedSimulator:
                 results = [run_shard(s) for s in specs]
             results = sorted(results, key=lambda r: r.spec.index)
             cursors = [_cursor_for_result(r) for r in results]
-            yield from _stream_windows(specs, cursors, duration_s, window_s)
+            chunks = _stream_windows(specs, cursors, duration_s, window_s)
+        if bus is None:
+            yield from chunks
+        else:
+            yield from _publish_chunks(chunks, bus, len(specs))

@@ -514,6 +514,12 @@ class Simulator:
         self.recovery_s: List[float] = []  # first-failure -> completion, s
         # advisory preemption notices: (t, worker, until) — see inject_notice
         self._notices: List[Tuple[float, int, float]] = []
+        # elastic-pool cost accounting (core.autoscale): piecewise integral
+        # of the live worker count over simulated time, accrued at the only
+        # two places the count changes (_ev_fail / _ev_add_worker).  Pure
+        # bookkeeping — no event is reordered, so byte-identity holds.
+        self._ws_acc = 0.0
+        self._ws_t = 0.0
         # per-function warm-set digest: func -> idle (warm) instance count
         # across live workers, maintained incrementally at every idle-set
         # mutation (complete / warm reuse / LRU evict / keep-alive sweep /
@@ -606,6 +612,67 @@ class Simulator:
         if until < t:
             raise ValueError(f"inject_notice: until={until} precedes t={t}")
         self._notices.append((t, worker, until))
+
+    # ------------------------------------------- mid-run elasticity hooks
+    # The inject_* schedule above is pre-run: begin() validates it in one
+    # pass and seeds the heap.  The schedule_* forms below are the *live*
+    # counterparts for an already-armed loop — the autoscaler actuator
+    # (core.autoscale) calls them between step_until() slices.  Each one
+    # validates eagerly (begin() has already run) and marks the shard dirty
+    # immediately, so the ShardCoordinator contract (§13) covers every
+    # autoscaler mutation the same tick it is scheduled.
+
+    def _check_schedule(self, hook: str, t: float, worker: int) -> None:
+        if worker < 0:
+            raise ValueError(f"{hook}: worker id must be >= 0, got {worker}")
+        if t < self.t:
+            raise ValueError(
+                f"{hook}: t={t} precedes the shard clock {self.t} — events "
+                "cannot be scheduled into the past"
+            )
+        if t > self._deadline:
+            raise ValueError(
+                f"{hook}: t={t} is past the run deadline {self._deadline} "
+                "and would never fire"
+            )
+
+    def schedule_worker_add(self, t: float, worker: int) -> None:
+        """Mid-run :meth:`inject_worker`: worker ``worker`` (re)joins at
+        ``t``.  Requires a prior :meth:`begin`; ``t`` must lie between the
+        shard clock and the run deadline."""
+        self._check_schedule("schedule_worker_add", t, worker)
+        self._push(t, _ADD, (worker,))
+        self._mark_dirty()
+
+    def schedule_worker_fail(self, t: float, worker: int) -> None:
+        """Mid-run :meth:`inject_failure`: worker ``worker`` dies at ``t``
+        (same validation window as :meth:`schedule_worker_add`)."""
+        self._check_schedule("schedule_worker_fail", t, worker)
+        self._push(t, _FAIL, (worker,))
+        self._mark_dirty()
+
+    def schedule_notice(self, t: float, worker: int, until: float) -> None:
+        """Mid-run :meth:`inject_notice`: open an advisory preemption
+        window ``[t, until)`` on ``worker`` right now.  ``_doomed_now``
+        reads the notice list live, so the warm-capacity/digest exclusion
+        applies from the moment the window opens."""
+        self._check_schedule("schedule_notice", t, worker)
+        if until < t:
+            raise ValueError(f"schedule_notice: until={until} precedes t={t}")
+        self._notices.append((t, worker, until))
+        self._mark_dirty()
+
+    # ------------------------------------------------ worker-seconds cost
+    def _ws_accrue(self) -> None:
+        self._ws_acc += len(self.workers) * (self.t - self._ws_t)
+        self._ws_t = self.t
+
+    def worker_seconds_until(self, t: float) -> float:
+        """Integral of the live worker count from the run start to ``t`` —
+        the provisioned-capacity cost (worker-seconds) an elastic pool is
+        scored on (``benchmarks/bench_autoscale.py``).  Non-mutating; a
+        static run reads ``n_workers * duration``."""
+        return self._ws_acc + len(self.workers) * max(t - self._ws_t, 0.0)
 
     # ------------------------------------------------------- fluctuations
     def _fluct_entry(self, n_vus: int) -> Dict:
@@ -763,6 +830,8 @@ class Simulator:
         self._prog_sleeps = [p.sleep_s.tolist() for p in programs]
         self._vu_pos = [0] * n_vus
         self._deadline = t_start + duration_s
+        self._ws_acc = 0.0
+        self._ws_t = t_start
         self._fluct_identity = None  # fresh run: all rows native until a steal
         self._fluct = self._fluct_entry(n_vus)
         self._overhead_s = cfg.overhead_ms / 1e3
@@ -1553,6 +1622,7 @@ class Simulator:
         worker = self.workers.get(wid)
         if worker is None or not worker.alive:
             return
+        self._ws_accrue()  # close the cost interval at the old pool size
         worker.advance(self.t)
         worker.alive = False
         self._queued_n -= len(worker.pending)
@@ -1576,6 +1646,7 @@ class Simulator:
     def _ev_add_worker(self, wid: int) -> None:
         if wid in self.workers:
             return
+        self._ws_accrue()  # close the cost interval at the old pool size
         w = _Worker(wid, self.cfg)
         w.last_t = self.t
         self.workers[wid] = w

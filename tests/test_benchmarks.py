@@ -29,7 +29,7 @@ def test_benchmarks_run_quick_smoke():
     walls = {l.split(",")[0].split("/")[1] for l in lines if l.startswith("_bench_wall/")}
     expected = {"table1", "trace", "latency", "coldstart", "imbalance", "throughput",
                 "concurrency", "overhead", "kernels", "pull_dispatch", "sim_speed",
-                "shard_scale", "admission", "stealing", "affinity"}
+                "shard_scale", "admission", "stealing", "affinity", "autoscale"}
     assert expected <= walls, f"missing modules: {expected - walls}"
     # the quick path must include the 2-shard smoke
     assert any(l.startswith("shard_scale/quick_2shards") for l in lines), lines[-20:]

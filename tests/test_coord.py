@@ -73,14 +73,33 @@ def _legacy_drain(sims, inv_workers, t, pending=None, **kw):
     return _real_drain(sims, inv_workers, t, pending=pending)
 
 
-def _run(policy, scn, dur, faults=None, legacy=False, seed=0, K=4, W=16):
+def _run(policy, scn, dur, faults=None, legacy=False, seed=0, K=4, W=16,
+         autoscale=False, coords=None):
     adm = AdmissionSimulator(
         K, W, scheduler="hiku", cfg=SimConfig(mem_pool_mb=1024.0), seed=seed,
         admission=AdmissionConfig(policy=policy, steal_watermark=1.25),
     )
+    kw = scn.run_kwargs()
+    if autoscale:
+        from repro.core import AutoscaleConfig, Autoscaler
+
+        kw["autoscaler"] = Autoscaler(
+            AutoscaleConfig(mode="predictive", target_pressure=0.6)
+        )
     with pytest.MonkeyPatch.context() as mp:
+        coord_cls = _AlwaysDirtyCoordinator if legacy else ShardCoordinator
+        if coords is not None:
+            base = coord_cls
+
+            class _Capture(base):
+                def __init__(self, *a, **k):
+                    super().__init__(*a, **k)
+                    coords.append(self)
+
+            coord_cls = _Capture
+        if coords is not None or legacy:
+            mp.setattr(admission_mod, "ShardCoordinator", coord_cls)
         if legacy:
-            mp.setattr(admission_mod, "ShardCoordinator", _AlwaysDirtyCoordinator)
             mp.setattr(admission_mod, "steal_tick", _legacy_steal)
             mp.setattr(admission_mod, "drain_tick", _legacy_drain)
             mp.setattr(
@@ -92,7 +111,7 @@ def _run(policy, scn, dur, faults=None, legacy=False, seed=0, K=4, W=16):
             )
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", RuntimeWarning)
-            return adm.run(scn.n_vus, dur, faults=faults, **scn.run_kwargs())
+            return adm.run(scn.n_vus, dur, faults=faults, **kw)
 
 
 def _assert_same_run(a, b):
@@ -130,6 +149,25 @@ def test_coordinator_byte_identical_under_shard_kill_wave(policy):
     b = _run(policy, scn, 12.0, faults=faults, legacy=True)
     _assert_same_run(a, b)
     assert a.n_salvages > 0  # the wave actually exercised the drain path
+
+
+@pytest.mark.parametrize("policy", ["pull", "pull+steal"])
+def test_coordinator_byte_identical_on_autoscaled_runs(policy):
+    """§14 x §13: autoscaler mutations (adds, notices, kills) flow through
+    the same dirty marks as faults, and the published ``pressure`` payload
+    is read from the coordinator cache — so an autoscaled run under the
+    cached coordinator is byte-identical to the all-dirty rebuild (same
+    records, same worker-seconds bill) while doing strictly fewer
+    refreshes.  A missing dirty mark on any elasticity hook would skew the
+    cached pressures, change a sizing decision, and fail the comparison."""
+    scn = make_scenario("flash_crowd", FUNCS, 48, 12.0, seed=3)
+    ca, cb = [], []
+    a = _run(policy, scn, 12.0, autoscale=True, coords=ca)
+    b = _run(policy, scn, 12.0, legacy=True, autoscale=True, coords=cb)
+    _assert_same_run(a, b)
+    assert a.worker_seconds == b.worker_seconds < 16 * 12.0
+    assert len(ca) == len(cb) == 1
+    assert ca[0].refreshes < cb[0].refreshes  # the A/B refreshes pin
 
 
 # -------------------------------------------- incremental pressure counters

@@ -1,0 +1,247 @@
+"""Event plane (docs/ARCHITECTURE.md §14): the deterministic pub/sub bus.
+
+Unit pins for the bus semantics — sealing, wildcard patterns, registration-
+order delivery, immutable payloads, the delivery log — plus the publication
+contracts of both drivers: ``ShardedSimulator.run_stream(bus=...)`` window
+summaries are identical on every backend and never perturb the stream, and
+the admission loop's per-window shard/cluster events tile the run (counts
+sum to the full record stream) in the §14 publish order.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import EventPlane, SimConfig
+from repro.core.admission import AdmissionConfig, AdmissionSimulator
+from repro.core.eventplane import CLUSTER_TOPIC, SHARD_TOPIC, MetricEvent
+from repro.core.shard import ShardedSimulator
+
+pytestmark = pytest.mark.shard
+
+K, W, VUS, DUR, WIN = 3, 9, 18, 15.0, 1.5
+
+
+# ------------------------------------------------------------ bus semantics
+def test_subscribe_validates_pattern_and_seal_freezes():
+    bus = EventPlane()
+    with pytest.raises(ValueError):
+        bus.subscribe((), lambda ev: None)  # empty
+    with pytest.raises(ValueError):
+        bus.subscribe(["shard", 0], lambda ev: None)  # not a tuple
+    bus.subscribe((SHARD_TOPIC, "*"), lambda ev: None)
+    assert not bus.sealed
+    bus.seal()
+    assert bus.sealed
+    bus.seal()  # idempotent
+    with pytest.raises(RuntimeError, match="sealed"):
+        bus.subscribe((CLUSTER_TOPIC,), lambda ev: None)
+
+
+def test_publish_seals_implicitly():
+    bus = EventPlane()
+    bus.publish((CLUSTER_TOPIC,), 0, 0.0, 1.0, {"n_done": 0})
+    assert bus.sealed
+    with pytest.raises(RuntimeError):
+        bus.subscribe((CLUSTER_TOPIC,), lambda ev: None)
+
+
+def test_wildcard_matching_and_counters():
+    bus = EventPlane()
+    got = {"shard": [], "cluster": [], "one": []}
+    bus.subscribe((SHARD_TOPIC, "*"), got["shard"].append)
+    bus.subscribe((CLUSTER_TOPIC,), got["cluster"].append)
+    bus.subscribe((SHARD_TOPIC, 1), got["one"].append)
+    for k in range(3):
+        bus.publish((SHARD_TOPIC, k), 0, 0.0, 1.0, {"k": k})
+    bus.publish((CLUSTER_TOPIC,), 0, 0.0, 1.0, {})
+    assert [ev.topic for ev in got["shard"]] == [(SHARD_TOPIC, k) for k in range(3)]
+    assert [ev.topic for ev in got["one"]] == [(SHARD_TOPIC, 1)]
+    assert len(got["cluster"]) == 1  # ("cluster",) never matches ("shard", k)
+    assert bus.published == 4 and bus.delivered == 5
+    # seq is the global publish order, shared across topics
+    assert [ev.seq for ev in got["shard"]] == [0, 1, 2]
+    assert got["cluster"][0].seq == 3
+
+
+def test_delivery_is_registration_order_and_payload_immutable():
+    bus = EventPlane()
+    order = []
+    bus.subscribe((SHARD_TOPIC, "*"), lambda ev: order.append("a"))
+    bus.subscribe((SHARD_TOPIC, 0), lambda ev: order.append("b"))
+    bus.subscribe((SHARD_TOPIC, "*"), lambda ev: order.append("c"))
+    ev = bus.publish((SHARD_TOPIC, 0), 7, 1.0, 2.0, {"n_done": 3})
+    assert order == ["a", "b", "c"]
+    assert isinstance(ev, MetricEvent) and ev.window == 7
+    with pytest.raises(TypeError):
+        ev.payload["n_done"] = 99  # MappingProxyType: read-only for everyone
+    # the source dict is copied: later caller mutation is invisible
+    src = {"x": 1}
+    ev2 = bus.publish((SHARD_TOPIC, 0), 8, 2.0, 3.0, src)
+    src["x"] = 2
+    assert ev2.payload["x"] == 1
+
+
+def test_delivery_log_is_pure_function_of_subscriptions():
+    """Same subscription set + same publish sequence => identical logs."""
+
+    def build():
+        bus = EventPlane()
+        bus.subscribe((SHARD_TOPIC, "*"), lambda ev: None)
+        bus.subscribe((CLUSTER_TOPIC,), lambda ev: None)
+        bus.subscribe((SHARD_TOPIC, 2), lambda ev: None)
+        rng = np.random.default_rng(11)
+        for i in range(50):
+            k = int(rng.integers(0, 4))
+            topic = (SHARD_TOPIC, k) if k < 3 else (CLUSTER_TOPIC,)
+            bus.publish(topic, i, float(i), float(i + 1), {"i": i})
+        return bus
+
+    a, b = build(), build()
+    assert a.log == b.log and len(a.log) > 0
+    assert (a.published, a.delivered) == (b.published, b.delivered)
+
+
+# ----------------------------------------------- run_stream(bus=...) driver
+def _collect(bus):
+    events = []
+    bus.subscribe((SHARD_TOPIC, "*"), events.append)
+    bus.subscribe((CLUSTER_TOPIC,), events.append)
+    return events
+
+
+def _stream_with_bus(backend):
+    bus = EventPlane()
+    events = _collect(bus)
+    driver = ShardedSimulator(K, W, scheduler="hiku", seed=5, backend=backend)
+    chunks = list(
+        driver.run_stream(n_vus=VUS, duration_s=DUR, window_s=WIN, bus=bus)
+    )
+    return bus, events, chunks
+
+
+@pytest.mark.parametrize("backend", ["serial", "interleaved", "process"])
+def test_run_stream_publishes_window_summaries(backend):
+    """Per chunk: K shard events (ascending k) then the cluster event, with
+    counts that reconcile exactly against the chunk itself."""
+    bus, events, chunks = _stream_with_bus(backend)
+    assert bus.sealed
+    per_window = (K + 1)
+    assert len(events) == per_window * len(chunks)
+    for i, ch in enumerate(chunks):
+        window = events[i * per_window : (i + 1) * per_window]
+        assert [ev.topic for ev in window] == [
+            (SHARD_TOPIC, k) for k in range(K)
+        ] + [(CLUSTER_TOPIC,)]
+        assert all(ev.window == ch.index for ev in window)
+        assert all((ev.t_lo, ev.t_hi) == (ch.t_lo, ch.t_hi) for ev in window)
+        for k in range(K):
+            assert window[k].payload["n_done"] == int(ch.shard_counts[k])
+        assert window[K].payload["n_done"] == len(ch.records)
+        assert window[K].payload["n_assign"] == len(ch.assign_t)
+
+
+def test_run_stream_summaries_identical_across_backends():
+    """The published event stream is a pure function of the run — byte-equal
+    topics, windows, and payloads on every backend (§14 replayability)."""
+    ref = None
+    for backend in ("serial", "interleaved", "process"):
+        _, events, _ = _stream_with_bus(backend)
+        flat = [(ev.topic, ev.window, ev.seq, dict(ev.payload)) for ev in events]
+        if ref is None:
+            ref = flat
+        else:
+            assert flat == ref
+    assert ref  # the run published something
+
+
+def test_run_stream_bus_does_not_perturb_stream():
+    """Publishing is passive: chunks with a bus == chunks without, byte for
+    byte (the static byte-identity half of the §14 contract)."""
+    plain = list(
+        ShardedSimulator(K, W, scheduler="hiku", seed=5, backend="serial")
+        .run_stream(n_vus=VUS, duration_s=DUR, window_s=WIN)
+    )
+    _, _, published = _stream_with_bus("serial")
+    assert len(plain) == len(published)
+    for a, b in zip(plain, published):
+        assert a.records.equals(b.records)
+        np.testing.assert_array_equal(a.assign_t, b.assign_t)
+        np.testing.assert_array_equal(a.assign_w, b.assign_w)
+        np.testing.assert_array_equal(a.shard_counts, b.shard_counts)
+
+
+def test_late_subscribe_during_stream_raises():
+    bus = EventPlane()
+    driver = ShardedSimulator(K, W, scheduler="hiku", seed=5, backend="serial")
+    stream = driver.run_stream(n_vus=VUS, duration_s=DUR, window_s=WIN, bus=bus)
+    next(stream)  # arms the run: the bus is sealed now
+    with pytest.raises(RuntimeError, match="sealed"):
+        bus.subscribe((CLUSTER_TOPIC,), lambda ev: None)
+    stream.close()
+
+
+# --------------------------------------------------- admission-loop driver
+def _admission(seed=0):
+    return AdmissionSimulator(
+        K, W, scheduler="hiku", cfg=SimConfig(mem_pool_mb=1024.0), seed=seed,
+        admission=AdmissionConfig(),
+    )
+
+
+def test_admission_publishes_windows_that_tile_the_run():
+    """Per metric window: K shard events then cluster, windows contiguous,
+    and the per-shard/cluster ``n_done`` counts sum to the full record
+    stream (the final partial window is flushed after the loop)."""
+    bus = EventPlane()
+    events = _collect(bus)
+    run = _admission().run(VUS, 8.0, bus=bus, metrics_window_s=1.0)
+    assert bus.sealed and len(events) > 0
+    per_window = K + 1
+    assert len(events) % per_window == 0
+    shard_total = 0
+    cluster_total = 0
+    prev_hi = 0.0
+    for i in range(0, len(events), per_window):
+        window = events[i : i + per_window]
+        assert [ev.topic for ev in window] == [
+            (SHARD_TOPIC, k) for k in range(K)
+        ] + [(CLUSTER_TOPIC,)]
+        assert all(ev.window == i // per_window for ev in window)
+        assert window[0].t_lo == prev_hi  # windows tile: (t_lo, t_hi]
+        prev_hi = window[0].t_hi
+        shard_total += sum(window[k].payload["n_done"] for k in range(K))
+        assert window[K].payload["n_done"] == sum(
+            window[k].payload["n_done"] for k in range(K)
+        )
+        cluster_total += window[K].payload["n_done"]
+        assert window[K].payload["queue_depth"] >= 0
+        for k in range(K):
+            assert window[k].payload["alive"] >= 0
+            assert window[k].payload["load"] >= 0
+    assert shard_total == cluster_total == len(run.records) > 0
+    # arrivals are window-scoped eligibility counts: each VU enters the
+    # admission queue exactly once, so the published sum never exceeds it
+    arrivals = sum(
+        ev.payload["arrivals"] for ev in events if ev.topic == (CLUSTER_TOPIC,)
+    )
+    assert 0 < arrivals <= VUS
+
+
+def test_admission_static_run_with_bus_is_byte_identical():
+    """A passive bus (no autoscaler) never perturbs the run."""
+    a = _admission().run(VUS, 8.0)
+    b = _admission().run(VUS, 8.0, bus=EventPlane(), metrics_window_s=2.0)
+    assert a.records.equals(b.records)
+    np.testing.assert_array_equal(a.assign_t, b.assign_t)
+    np.testing.assert_array_equal(a.assign_w, b.assign_w)
+    assert a.admitted == b.admitted and a.n_events == b.n_events
+    assert a.worker_seconds == b.worker_seconds == W * 8.0
+
+
+def test_admission_rejects_window_off_the_tick_grid():
+    """window_s must be a positive multiple of tick_s (default 0.25):
+    publication happens on tick boundaries only."""
+    with pytest.raises(ValueError, match="multiple"):
+        _admission().run(VUS, 8.0, bus=EventPlane(), metrics_window_s=0.3)
+    with pytest.raises(ValueError):
+        _admission().run(VUS, 8.0, bus=EventPlane(), metrics_window_s=-1.0)

@@ -103,6 +103,40 @@ def test_unlink_is_idempotent():
     assert name not in _segments()
 
 
+def test_unlink_raced_between_attach_and_unlink_stays_tracker_balanced(
+    monkeypatch,
+):
+    """The double-unlink race: a concurrent cleanup wins between our attach
+    and our ``unlink()``.  The failed unlink must not raise — and it must
+    still unregister the attach-time ``resource_tracker`` registration
+    (attaching registers on Python <= 3.12): left unbalanced, the tracker
+    re-unlinks the *name* at interpreter exit, clobbering any later segment
+    that reused it."""
+    from multiprocessing import shared_memory
+
+    from repro.core import records as records_mod
+
+    name = f"{SHM_PREFIX}test-{os.getpid()}-race"
+    write_columns_shm(name, _sample_columns(), [0.5], [1])
+    untracked = []
+    real_untrack = records_mod._untrack_shm
+    monkeypatch.setattr(
+        records_mod, "_untrack_shm",
+        lambda shm: (untracked.append(shm._name), real_untrack(shm))[-1],
+    )
+
+    class _RacedShm(shared_memory.SharedMemory):
+        def unlink(self):
+            super().unlink()  # the racing winner removes the segment...
+            raise FileNotFoundError(self._name)  # ...and we observe the loss
+
+    monkeypatch.setattr(shared_memory, "SharedMemory", _RacedShm)
+    unlink_columns_shm(name)  # must swallow the race AND untrack
+    assert [n.lstrip("/") for n in untracked] == [name]
+    assert name not in _segments()
+    unlink_columns_shm(name)  # and stays idempotent afterwards
+
+
 def _crash_after_write(spec):
     """Stand-in pool entry simulating a writer that dies after creating its
     segment but before shipping the metadata back (the orphan hazard)."""

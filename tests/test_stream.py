@@ -145,3 +145,61 @@ def test_accumulator_extend_is_exact():
     acc.extend(cols[:1])
     acc.extend(cols[1:])
     assert acc.columns().equals(cols)
+
+
+def test_window_boundary_tie_lands_in_exactly_one_window():
+    """A completion (or assignment) at exactly ``t == t_hi`` belongs to that
+    window and never reappears in the next: windows are ``(t_lo, t_hi]``
+    half-open, so boundary ties are read once (the bisect_right cursor)."""
+    from types import SimpleNamespace
+
+    from repro.core.shard import _stream_windows, _StreamCursor
+
+    td = [1.5, 3.0]  # both exactly on a WIN=1.5 window edge
+    cols = ([1.0, 2.0], td, [0, 1], [0, 1], [False, True], [0, 1], [False, False])
+    cur = _StreamCursor(td, cols, [1.5, 3.0], [0, 1])
+    spec = SimpleNamespace(worker_offset=0, vu_offset=0)
+    chunks = list(_stream_windows([spec], [cur], duration_s=3.0, window_s=1.5))
+    assert [ch.index for ch in chunks] == [0, 1]
+    assert chunks[0].records.t_done.tolist() == [1.5]  # tie -> its own window
+    assert chunks[1].records.t_done.tolist() == [3.0]
+    assert chunks[0].assign_t.tolist() == [1.5]
+    assert chunks[1].assign_t.tolist() == [3.0]
+    assert sum(len(ch.records) for ch in chunks) == 2  # once each, no dupes
+
+
+def test_stream_bus_summaries_match_batch_on_every_backend():
+    """§14 parity: the bus-published per-window summaries are a pure
+    function of the run — identical across backends, per-shard counts
+    summing to the batch merge, cluster counts matching the chunks."""
+    from repro.core import EventPlane
+
+    batch = ShardedSimulator(K, W, scheduler="hiku", seed=5, backend="serial").run(
+        n_vus=VUS, duration_s=DUR
+    )
+    streams = {}
+    for backend in ("serial", "interleaved", "process"):
+        bus = EventPlane()
+        events = []
+        bus.subscribe(("shard", "*"), events.append)
+        bus.subscribe(("cluster",), events.append)
+        chunks = list(
+            ShardedSimulator(K, W, scheduler="hiku", seed=5, backend=backend)
+            .run_stream(n_vus=VUS, duration_s=DUR, window_s=WIN, bus=bus)
+        )
+        streams[backend] = [
+            (ev.topic, ev.window, dict(ev.payload)) for ev in events
+        ]
+        # cluster events reconcile against the chunks they summarize
+        cluster = [ev for ev in events if ev.topic == ("cluster",)]
+        assert [ev.payload["n_done"] for ev in cluster] == [
+            len(ch.records) for ch in chunks
+        ]
+        assert sum(ev.payload["n_done"] for ev in cluster) == len(batch.records)
+        # per-shard counts sum to the batch merge, shard by shard
+        per_shard = np.zeros(K, np.int64)
+        for ev in events:
+            if ev.topic[0] == "shard":
+                per_shard[ev.topic[1]] += ev.payload["n_done"]
+        assert int(per_shard.sum()) == len(batch.records)
+    assert streams["serial"] == streams["interleaved"] == streams["process"]
